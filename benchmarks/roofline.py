@@ -1,0 +1,53 @@
+"""Roofline summary: aggregates results/dryrun/*.json (produced by
+``python -m repro.launch.sweep``) into per-cell rows. Requires the sweep to
+have run; cells not yet swept are reported as missing."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
+                           "dryrun")
+
+
+def load_cells():
+    cells = []
+    for path in sorted(glob.glob(os.path.join(RESULTS_DIR, "*.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def run():
+    rows = []
+    cells = load_cells()
+    if not cells:
+        return [("roofline.note", 0.0,
+                 "run `python -m repro.launch.sweep` first")]
+    n_ok = n_skip = n_err = 0
+    worst = None
+    for c in cells:
+        key = f"{c.get('arch')}__{c.get('shape')}__{c.get('mesh', '?')}"
+        if "skipped" in c:
+            n_skip += 1
+            continue
+        if "error" in c:
+            n_err += 1
+            rows.append((f"roofline.ERROR.{key}", 0.0, c["error"][:60]))
+            continue
+        n_ok += 1
+        rl = c["roofline"]
+        rows.append((f"roofline.{key}.bound_s",
+                     rl["step_time_bound_s"] * 1e6,
+                     f"dom={rl['dominant']} frac={rl['roofline_fraction']:.3f}"
+                     f" useful={rl['useful_flops_ratio']:.3f}"
+                     f" fits={c['memory']['fits_16GB']}"))
+        if worst is None or rl["roofline_fraction"] < worst[1]:
+            worst = (key, rl["roofline_fraction"])
+    rows.append(("roofline.cells_ok", float(n_ok), ""))
+    rows.append(("roofline.cells_skipped_documented", float(n_skip), ""))
+    rows.append(("roofline.cells_error", float(n_err), ""))
+    if worst:
+        rows.append(("roofline.worst_fraction", worst[1], worst[0]))
+    return rows

@@ -1,0 +1,33 @@
+"""Benchmark harness: one module per paper table (+ roofline summary).
+Prints ``name,us_per_call,derived`` CSV rows."""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    sys.path.insert(0, "src")
+    from benchmarks import roofline, table1_overhead, table2_shell, table3_matmul
+
+    modules = [
+        ("table1", table1_overhead),
+        ("table2", table2_shell),
+        ("table3", table3_matmul),
+        ("roofline", roofline),
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, mod in modules:
+        try:
+            for row_name, value, derived in mod.run():
+                print(f"{row_name},{value:.4f},{str(derived).replace(',', ';')}")
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{name}.FAILED,0,{type(e).__name__}: "
+                  f"{str(e)[:120].replace(chr(10), ' ')}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,80 @@
+"""Paper Table I: latency of status calls, full configuration and partial
+reconfiguration, with and without the RC3E middleware.
+
+FPGA -> TPU mapping: full configuration = cold jit lower+compile of a user
+core; PR = hot swap from the program cache. The paper's absolute numbers
+(JTAG/USB bitstream loads) are hardware-bound; what must reproduce is the
+ORDERING and the small middleware overhead: status ≪ PR ≪ full config, and
+RC3E adds only bookkeeping overhead to each.
+"""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ClusterSpec, Hypervisor
+from repro.rc2f import CoreSpec, StreamSpec
+
+
+def _timeit(fn, n=20, warmup=2):
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn()
+    return (time.perf_counter() - t0) / n * 1e6      # us
+
+
+def run():
+    hv = Hypervisor(ClusterSpec(n_nodes=2, devices_per_node=2))
+    vs = hv.allocate_vslice("bench", 1)
+
+    # --- status: local (monitor object) vs over RC3E middleware ---
+    t_status_local = _timeit(lambda: hv.monitor.db.utilization())
+    t_status_rc3e = _timeit(lambda: hv.status())
+
+    # --- configuration: cold compile (unique core each time) ---
+    def fresh_core(scale):
+        def core(a, b):
+            return (a @ b * scale,)
+        core.__name__ = f"core_{scale}"
+        return core
+
+    ex = (jnp.ones((64, 64), jnp.float32), jnp.ones((64, 64), jnp.float32))
+    cold_times = []
+    for i in range(5):
+        t0 = time.perf_counter()
+        hv.program_slice(vs.slice_id, fresh_core(float(i + 2)), ex,
+                         static_desc=f"cold{i}")
+        cold_times.append((time.perf_counter() - t0) * 1e6)
+    t_config = float(np.mean(cold_times))
+
+    # --- partial reconfiguration: swap back to a cached core ---
+    stable = fresh_core(1.0)
+    hv.program_slice(vs.slice_id, stable, ex, static_desc="stable")
+    t_pr = _timeit(lambda: hv.program_slice(vs.slice_id, stable, ex,
+                                            static_desc="stable"), n=20)
+
+    # direct (no middleware) variants
+    t_pr_direct = _timeit(
+        lambda: hv.reconfig.partial_reconfigure(stable, ex,
+                                                static_desc="stable"), n=20)
+
+    rows = [
+        ("table1.status_local_us", t_status_local,
+         "paper: 11 ms local"),
+        ("table1.status_rc3e_us", t_status_rc3e,
+         "paper: 80 ms over RC3E"),
+        ("table1.full_configuration_us", t_config,
+         "paper: ~29 s bitstream; here cold XLA compile"),
+        ("table1.partial_reconfig_direct_us", t_pr_direct,
+         "paper: 732 ms local PR"),
+        ("table1.partial_reconfig_rc3e_us", t_pr,
+         "paper: 912 ms PR over RC3E"),
+        ("table1.pr_speedup_vs_full", t_config / max(t_pr, 1e-9),
+         "paper: ~32x (29.5s/0.91s)"),
+    ]
+    assert t_pr < t_config, "PR must be faster than full configuration"
+    return rows

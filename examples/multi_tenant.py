@@ -1,0 +1,72 @@
+"""Multi-tenant shell demo — the paper's headline scenario (§V, Table III):
+four tenants' cores co-resident on ONE physical device, throughput per core
+degrading as they share bandwidth while total utilization rises; then one
+tenant is hot-swapped (partial reconfiguration) without disturbing others.
+
+Run:  PYTHONPATH=src python examples/multi_tenant.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.rc2f import CoreSpec, FusedShell, SharedLink, StreamSpec, core_throughput
+
+G, N_BLOCKS = 64, 12
+SPEC = CoreSpec("mm16", (StreamSpec((G, 16, 16)), StreamSpec((G, 16, 16))),
+                (StreamSpec((G, 16, 16)),))
+
+
+def mm_core(a, b):
+    return jnp.einsum("gij,gjk->gik", a, b)
+
+
+def axpy_core(a, b):
+    return a * 2.0 + b
+
+
+def measure(shell, slots, blocks):
+    inputs = {s: blocks for s in slots}
+    shell.run_cycle(inputs)      # warm
+    t0 = time.perf_counter()
+    for _ in range(N_BLOCKS):
+        out = shell.run_cycle(inputs)
+    jax.block_until_ready(list(out.values())[0])
+    dt = time.perf_counter() - t0
+    per_core = N_BLOCKS * 2 * blocks[0].nbytes / dt / 1e6
+    return per_core, per_core * len(slots)
+
+
+def main():
+    a = np.random.rand(G, 16, 16).astype(np.float32)
+    link = SharedLink()
+    print("paper Table III model (16x16, MB/s/core):",
+          [round(core_throughput(509e6, link, n) / 1e6) for n in (1, 2, 4)])
+
+    print("\nmeasured on this host (one physical device, fused shell):")
+    shell = FusedShell(4)
+    history = []
+    for n in (1, 2, 4):
+        for s in range(n):
+            shell.load(s, mm_core, SPEC, f"tenant{s}")
+        per, total = measure(shell, list(range(n)), (a, a))
+        history.append((n, per, total))
+        print(f"  {n} tenant(s): {per:7.1f} MB/s/core, {total:7.1f} MB/s total")
+    base = history[0][2]
+    print(f"  -> total throughput with 4 tenants = "
+          f"{history[-1][2] / base:.2f}x of 1 tenant "
+          "(paper: utilization maximized despite per-core loss)")
+
+    # hot swap tenant 2's core (PR) and verify tenant 0 output unchanged
+    before = shell.run_cycle({s: (a, a) for s in range(4)})
+    shell.load(2, axpy_core, SPEC, "tenant2-v2")
+    after = shell.run_cycle({s: (a, a) for s in range(4)})
+    ok = np.allclose(np.asarray(before[0]), np.asarray(after[0]))
+    print(f"\npartial reconfiguration of slot 2: tenant 0 output unchanged: {ok}")
+    print("slot 2 now computes 2a+b:",
+          np.allclose(np.asarray(after[2]), 2 * a + a))
+
+
+if __name__ == "__main__":
+    main()

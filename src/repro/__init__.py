@@ -1,0 +1,17 @@
+"""repro: RC3E on TPU — a multi-tenant accelerator-cloud hypervisor and
+computing framework (vFPGA -> vSlice virtualization) in JAX.
+
+Subpackages:
+  core     RC3E hypervisor: device DB, vSlices, service models, scheduler,
+           partial reconfiguration, monitoring, elasticity
+  rc2f     RC2F dataplane: streaming FIFOs, shell (co-resident user cores),
+           config spaces, core API + admission
+  models   10 assigned architectures (dense/MoE/SSM/hybrid/enc-dec/VLM)
+  runtime  train/serve steps, sharding rules, losses, batching engine
+  optim    AdamW + int8-compressed gradient all-reduce
+  data     synthetic token pipeline
+  ckpt     checkpoint/restore/reshard
+  kernels  Pallas TPU kernels (+ refs, interpret-mode validated)
+  launch   production meshes, multi-pod dry-run, sweep, train/serve
+"""
+__version__ = "1.0.0"

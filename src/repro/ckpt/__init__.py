@@ -1,0 +1,2 @@
+from repro.ckpt.checkpoint import (available_steps, latest_step, reshard,
+                                   restore, save, save_async)

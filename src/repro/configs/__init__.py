@@ -1,0 +1,4 @@
+from repro.configs.base import (LONG_CONTEXT_ARCHS, SHAPES, EncoderConfig,
+                                MLAConfig, ModelConfig, MoEConfig, ShapeCell,
+                                SSMConfig)
+from repro.configs.registry import ARCH_IDS, all_configs, get_config, reduced

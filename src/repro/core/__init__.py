@@ -1,0 +1,13 @@
+"""RC3E core: the paper's primary contribution (hypervisor + vFPGA
+virtualization + service models) as a JAX-cluster control plane."""
+from repro.core.device_db import (MAX_SLOTS, DeviceDB, DeviceState,
+                                  NoCapacityError, PhysicalDevice, SliceState,
+                                  VSlice)
+from repro.core.elastic import ElasticController
+from repro.core.hypervisor import ClusterSpec, Hypervisor
+from repro.core.monitor import Monitor, MonitorConfig
+from repro.core.reconfig import (ProgramCache, ProgramEntry, Reconfigurator,
+                                 fingerprint)
+from repro.core.scheduler import BatchScheduler, Job, JobState
+from repro.core.service_models import (BAaaSSession, RAaaSSession,
+                                       RSaaSSession)

@@ -1,0 +1,52 @@
+"""Elastic scaling: grow/shrink a tenant's slice set and re-place work.
+
+The paper's outlook ("migration of user designs between vFPGAs and physical
+FPGAs is also intended") is implemented here as a first-class operation:
+``resize`` reallocates a tenant to a new slot count, carrying the program
+fingerprint so the PR cache makes re-programming cheap, and the training
+runtime pairs this with ``repro.ckpt.reshard`` to move optimizer/model state
+onto the new data-parallel extent.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+from repro.core.device_db import NoCapacityError, SliceState, VSlice
+from repro.core.hypervisor import Hypervisor
+
+
+class ElasticController:
+    def __init__(self, hv: Hypervisor):
+        self.hv = hv
+
+    def resize(self, owner: str, new_slots: int,
+               service_model: str = "raas") -> List[VSlice]:
+        """Replace the tenant's slices with one allocation of ``new_slots``.
+
+        Allocate-before-release so a failed grow leaves the tenant intact.
+        """
+        old = self.hv.db.slices_of(owner)
+        program = old[0].program if old else None
+        new = self.hv.db.allocate_slice(owner, new_slots, service_model)
+        for s in old:
+            self.hv.release(s.slice_id)
+        if program:
+            new.program = program
+            new.state = SliceState.CONFIGURED
+        self.hv._log("elastic_resize", owner=owner, slots=new_slots,
+                     slice=new.slice_id)
+        return [new]
+
+    def shrink_to_survivors(self, owner: str) -> Optional[VSlice]:
+        """After a node failure: re-place the tenant on surviving capacity at
+        the largest slot count that fits (elastic degrade). Returns the new
+        slice, or None if the cluster is full."""
+        for slots in (4, 2, 1):
+            try:
+                vs = self.hv.db.allocate_slice(owner, slots, "raas")
+                self.hv._log("elastic_degrade", owner=owner, slots=slots,
+                             slice=vs.slice_id)
+                return vs
+            except NoCapacityError:
+                continue
+        return None

@@ -1,0 +1,173 @@
+"""RC3E hypervisor (paper §IV): the control plane tying together the device
+database, program cache / partial reconfiguration, batch scheduler and
+monitor, and exposing the three cloud service models:
+
+  RSaaS  - allocate a full physical mesh, run arbitrary jitted programs
+  RAaaS  - allocate a vSlice, plug a user core into the RC2F shell
+  BAaaS  - invoke a provider-prebuilt service (model zoo), allocation hidden
+
+On this CPU container the "physical device" is a simulated inventory; the
+dataplane executes on the host jax device. On a real cluster the same control
+plane drives per-slice jax meshes (launch/mesh.py builds them).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+from repro.core.device_db import (DeviceDB, DeviceState, NoCapacityError,
+                                  SliceState, VSlice)
+from repro.core.monitor import Monitor, MonitorConfig
+from repro.core.reconfig import ProgramCache, ProgramEntry, Reconfigurator
+from repro.core.scheduler import BatchScheduler
+
+
+@dataclass
+class ClusterSpec:
+    """Inventory description, e.g. 2 nodes × 2 devices × 256 chips."""
+    n_nodes: int = 2
+    devices_per_node: int = 2
+    chips_per_device: int = 256
+
+
+class Hypervisor:
+    def __init__(self, spec: ClusterSpec = ClusterSpec(),
+                 monitor_cfg: MonitorConfig = MonitorConfig(),
+                 clock: Callable[[], float] = time.monotonic):
+        self.db = DeviceDB()
+        for ni in range(spec.n_nodes):
+            node = self.db.add_node(f"node-{ni}")
+            node.last_heartbeat = clock()
+            for di in range(spec.devices_per_node):
+                self.db.add_device(f"dev-{ni}-{di}", node.node_id,
+                                   spec.chips_per_device)
+        self.reconfig = Reconfigurator(ProgramCache())
+        self.scheduler = BatchScheduler(self.db, clock)
+        self.monitor = Monitor(self.db, monitor_cfg, clock)
+        self.clock = clock
+        self.log: List[dict] = []
+
+    # ------------------------------------------------------------------
+    # Middleware entry points (paper §IV-C)
+    # ------------------------------------------------------------------
+    def status(self) -> dict:
+        """RC2F status call analogue (Table I row 1)."""
+        return self.monitor.status()
+
+    # ---------------- RSaaS ----------------
+    def allocate_physical(self, owner: str,
+                          device_id: Optional[str] = None):
+        dev = self.db.allocate_exclusive(owner, device_id)
+        self._log("rsaas_alloc", owner=owner, device=dev.device_id)
+        return dev
+
+    # ---------------- RAaaS ----------------
+    def allocate_vslice(self, owner: str, slots: int = 1,
+                        service_model: str = "raas") -> VSlice:
+        vs = self.db.allocate_slice(owner, slots, service_model)
+        self._log("vslice_alloc", owner=owner, slice=vs.slice_id,
+                  device=vs.device_id, slots=slots)
+        return vs
+
+    def release(self, slice_id: str):
+        self.db.release(slice_id)
+        self.monitor.clear_slice(slice_id)
+        self._log("release", slice=slice_id)
+
+    def program_slice(self, slice_id: str, fn: Callable, example_inputs,
+                      static_desc: str = "") -> ProgramEntry:
+        """Configure a vSlice with a user core (full config or PR swap)."""
+        entry, dt, hit = self.reconfig.partial_reconfigure(
+            fn, example_inputs, static_desc=static_desc)
+        self.db.set_slice_state(slice_id, SliceState.CONFIGURED,
+                                program=entry.fingerprint)
+        self._log("program", slice=slice_id, fingerprint=entry.fingerprint,
+                  seconds=dt, cache_hit=hit)
+        return entry
+
+    def execute(self, slice_id: str, *args):
+        """Run the slice's configured executable; records step time for the
+        straggler monitor."""
+        vs = self.db.find_slice(slice_id)
+        if vs.program is None:
+            raise RuntimeError(f"slice {slice_id} not configured")
+        entry = self._entry_for(vs.program)
+        self.db.set_slice_state(slice_id, SliceState.RUNNING)
+        t0 = self.clock()
+        out = entry.compiled(*args)
+        self.monitor.record_step(slice_id, (self.clock() - t0) * 1e3)
+        self.db.set_slice_state(slice_id, SliceState.CONFIGURED)
+        return out
+
+    def _entry_for(self, fingerprint: str) -> ProgramEntry:
+        for e in self.reconfig.cache._entries.values():
+            if e.fingerprint == fingerprint:
+                return e
+        raise KeyError(f"program {fingerprint} evicted")
+
+    # ---------------- BAaaS ----------------
+    def register_service(self, name: str, builder: Callable[[], Any]):
+        """Provider-prebuilt service (bitfile + host app in the paper)."""
+        self._services = getattr(self, "_services", {})
+        self._services[name] = builder
+
+    def invoke_service(self, name: str, owner: str, *args, slots: int = 1):
+        """BAaaS: allocation + configuration happen invisibly."""
+        services = getattr(self, "_services", {})
+        if name not in services:
+            raise KeyError(f"no service {name!r}")
+        vs = self.allocate_vslice(owner, slots, service_model="baas")
+        try:
+            fn, example_inputs = services[name]()
+            self.program_slice(vs.slice_id, fn, example_inputs,
+                               static_desc=name)
+            return self.execute(vs.slice_id, *(args or example_inputs))
+        finally:
+            self.release(vs.slice_id)
+
+    # ------------------------------------------------------------------
+    # Failure handling / elasticity
+    # ------------------------------------------------------------------
+    def handle_failures(self) -> List[str]:
+        """Heartbeat sweep -> mark dead nodes -> requeue orphaned batch jobs.
+        Returns orphaned slice ids."""
+        orphans = self.monitor.check_heartbeats()
+        ids = [s.slice_id for s in orphans]
+        if ids:
+            self.scheduler.requeue_orphans(ids)
+            self._log("failover", orphans=ids)
+        return ids
+
+    def migrate_stragglers(self) -> List[str]:
+        """Re-place slices flagged by the straggler policy (paper's load
+        distribution role). Returns new slice ids."""
+        moved = []
+        for sid in self.monitor.find_stragglers():
+            try:
+                vs = self.db.find_slice(sid)
+            except KeyError:
+                continue
+            owner, slots, model, program = (vs.owner, vs.slots,
+                                            vs.service_model, vs.program)
+            old_dev = vs.device_id
+            self.db.set_slice_state(sid, SliceState.MIGRATING)
+            try:
+                new = self.db.allocate_slice(owner, slots, model or "raas",
+                                             exclude_device=old_dev)
+            except NoCapacityError:
+                # nowhere better to go; keep the original placement
+                self.db.set_slice_state(sid, SliceState.RUNNING)
+                continue
+            new.program = program
+            new.state = SliceState.CONFIGURED if program else SliceState.ALLOCATED
+            self.db.release(sid)
+            self.monitor.clear_slice(sid)
+            moved.append(new.slice_id)
+            self._log("migrate", old=sid, new=new.slice_id,
+                      old_device=old_dev, new_device=new.device_id)
+        return moved
+
+    # ------------------------------------------------------------------
+    def _log(self, kind: str, **kw):
+        self.log.append({"t": self.clock(), "kind": kind, **kw})

@@ -1,0 +1,105 @@
+"""Monitoring: heartbeats, failure detection, straggler mitigation.
+
+The paper's RC3E monitors device status via the gcs registers; at pod scale
+this grows into (a) node heartbeats with a miss deadline -> DEAD -> slice
+re-placement, and (b) per-slice step-time tracking: a slice whose recent
+step times exceed ``straggler_factor`` × fleet median for ``patience``
+consecutive steps is flagged for migration.
+
+A injectable ``clock`` makes every policy deterministic in tests.
+"""
+from __future__ import annotations
+
+import statistics
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+from repro.core.device_db import DeviceDB, VSlice
+
+
+@dataclass
+class MonitorConfig:
+    heartbeat_interval_s: float = 5.0
+    heartbeat_deadline_s: float = 15.0
+    straggler_factor: float = 1.5
+    straggler_patience: int = 3
+    step_window: int = 16
+
+
+class Monitor:
+    def __init__(self, db: DeviceDB, cfg: MonitorConfig = MonitorConfig(),
+                 clock: Callable[[], float] = time.monotonic):
+        self.db = db
+        self.cfg = cfg
+        self.clock = clock
+        self._step_times: Dict[str, List[float]] = {}
+        self._straggler_strikes: Dict[str, int] = {}
+        self.events: List[dict] = []
+
+    # ---------------- heartbeats ----------------
+    def heartbeat(self, node_id: str):
+        self.db.nodes[node_id].last_heartbeat = self.clock()
+
+    def check_heartbeats(self) -> List[VSlice]:
+        """Mark nodes past deadline DEAD; return orphaned slices."""
+        now = self.clock()
+        orphans: List[VSlice] = []
+        for node in list(self.db.nodes.values()):
+            if not node.alive:
+                continue
+            if now - node.last_heartbeat > self.cfg.heartbeat_deadline_s:
+                orphans.extend(self.db.mark_node_dead(node.node_id))
+                self.events.append({"t": now, "kind": "node_dead",
+                                    "node": node.node_id,
+                                    "orphans": [s.slice_id for s in orphans]})
+        return orphans
+
+    # ---------------- stragglers ----------------
+    def record_step(self, slice_id: str, step_ms: float):
+        w = self._step_times.setdefault(slice_id, [])
+        w.append(step_ms)
+        if len(w) > self.cfg.step_window:
+            del w[0]
+
+    def median_step_ms(self) -> Optional[float]:
+        all_recent = [t for w in self._step_times.values() for t in w]
+        return statistics.median(all_recent) if all_recent else None
+
+    def find_stragglers(self) -> List[str]:
+        """Slices whose recent steps are consistently slow vs fleet median."""
+        med = self.median_step_ms()
+        if med is None:
+            return []
+        flagged = []
+        for sid, w in self._step_times.items():
+            recent = w[-self.cfg.straggler_patience:]
+            if (len(recent) >= self.cfg.straggler_patience
+                    and all(t > self.cfg.straggler_factor * med
+                            for t in recent)):
+                strikes = self._straggler_strikes.get(sid, 0) + 1
+                self._straggler_strikes[sid] = strikes
+                flagged.append(sid)
+                self.events.append({"t": self.clock(), "kind": "straggler",
+                                    "slice": sid, "median_ms": med,
+                                    "recent_ms": recent})
+            else:
+                self._straggler_strikes.pop(sid, None)
+        return flagged
+
+    def clear_slice(self, slice_id: str):
+        self._step_times.pop(slice_id, None)
+        self._straggler_strikes.pop(slice_id, None)
+
+    # ---------------- status (gcs analogue) ----------------
+    def status(self) -> dict:
+        return {
+            "devices": {d.device_id: {
+                "state": d.state.value,
+                "slots_used": d.used_slots(),
+                "slices": {s.slice_id: s.state.value
+                           for s in d.slices.values()},
+            } for d in self.db.devices.values()},
+            "utilization": self.db.utilization(),
+            "median_step_ms": self.median_step_ms(),
+        }

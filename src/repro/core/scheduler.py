@@ -1,0 +1,149 @@
+"""Batch system (paper §IV-C: "integrated batch system for long-running
+applications without direct user interaction").
+
+Jobs specify slice size, service model and a run callable. The scheduler
+admits jobs FIFO-within-priority when capacity exists, tracks running jobs,
+and re-queues jobs orphaned by node failures or straggler migration.
+"""
+from __future__ import annotations
+
+import enum
+import heapq
+import itertools
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+from repro.core.device_db import DeviceDB, NoCapacityError, SliceState
+
+
+class JobState(str, enum.Enum):
+    QUEUED = "queued"
+    RUNNING = "running"
+    DONE = "done"
+    FAILED = "failed"
+    REQUEUED = "requeued"
+
+
+@dataclass(order=True)
+class _QEntry:
+    priority: int
+    seq: int
+    job_id: str = field(compare=False)
+
+
+@dataclass
+class Job:
+    job_id: str
+    owner: str
+    slots: int                    # vSlice size (1/2/4)
+    service_model: str            # raas | baas
+    run: Optional[Callable[..., Any]] = None   # called with (slice_id)
+    priority: int = 10            # lower = sooner
+    state: JobState = JobState.QUEUED
+    slice_id: Optional[str] = None
+    result: Any = None
+    error: Optional[str] = None
+    submitted_at: float = 0.0
+    attempts: int = 0
+    max_attempts: int = 3
+
+
+class BatchScheduler:
+    def __init__(self, db: DeviceDB, clock: Callable[[], float] = time.monotonic):
+        self.db = db
+        self.clock = clock
+        self.jobs: Dict[str, Job] = {}
+        self._heap: List[_QEntry] = []
+        self._seq = itertools.count()        # job ids
+        self._hseq = itertools.count()       # FIFO tiebreak within priority
+        self.history: List[dict] = []
+
+    # ---------------- submission ----------------
+    def submit(self, owner: str, slots: int, service_model: str = "raas",
+               run: Optional[Callable] = None, priority: int = 10) -> Job:
+        job_id = f"job-{next(self._seq):05d}"
+        job = Job(job_id, owner, slots, service_model, run, priority,
+                  submitted_at=self.clock())
+        self.jobs[job_id] = job
+        heapq.heappush(self._heap, _QEntry(priority, next(self._hseq), job_id))
+        return job
+
+    # ---------------- scheduling loop ----------------
+    def schedule_once(self) -> List[Job]:
+        """Admit as many queued jobs as capacity allows (priority order).
+        Returns the jobs started this pass."""
+        started: List[Job] = []
+        deferred: List[_QEntry] = []
+        while self._heap:
+            entry = heapq.heappop(self._heap)
+            job = self.jobs[entry.job_id]
+            if job.state not in (JobState.QUEUED, JobState.REQUEUED):
+                continue
+            try:
+                vs = self.db.allocate_slice(job.owner, job.slots,
+                                            job.service_model)
+            except NoCapacityError:
+                deferred.append(entry)
+                # keep draining the queue: a smaller job behind may still fit
+                continue
+            job.slice_id = vs.slice_id
+            job.state = JobState.RUNNING
+            job.attempts += 1
+            self.db.set_slice_state(vs.slice_id, SliceState.RUNNING)
+            self.history.append({"t": self.clock(), "kind": "start",
+                                 "job": job.job_id, "slice": vs.slice_id})
+            started.append(job)
+        for e in deferred:
+            heapq.heappush(self._heap, e)
+        return started
+
+    def run_pending(self) -> List[Job]:
+        """Admit + synchronously execute (test/CPU mode)."""
+        started = self.schedule_once()
+        for job in started:
+            try:
+                if job.run is not None:
+                    job.result = job.run(job.slice_id)
+                self.complete(job.job_id)
+            except Exception as e:  # noqa: BLE001 - job isolation
+                self.fail(job.job_id, str(e))
+        return started
+
+    # ---------------- lifecycle ----------------
+    def complete(self, job_id: str):
+        job = self.jobs[job_id]
+        job.state = JobState.DONE
+        if job.slice_id:
+            self.db.release(job.slice_id)
+            job.slice_id = None
+        self.history.append({"t": self.clock(), "kind": "done", "job": job_id})
+
+    def fail(self, job_id: str, error: str):
+        job = self.jobs[job_id]
+        job.error = error
+        if job.slice_id:
+            try:
+                self.db.release(job.slice_id)
+            except KeyError:
+                pass   # slice died with its node
+            job.slice_id = None
+        if job.attempts < job.max_attempts:
+            job.state = JobState.REQUEUED
+            heapq.heappush(self._heap,
+                           _QEntry(job.priority, next(self._hseq), job_id))
+        else:
+            job.state = JobState.FAILED
+        self.history.append({"t": self.clock(), "kind": "fail", "job": job_id,
+                             "error": error, "attempts": job.attempts})
+
+    def requeue_orphans(self, orphan_slice_ids: List[str]):
+        """Called by the hypervisor after a node failure."""
+        for job in self.jobs.values():
+            if job.state == JobState.RUNNING and job.slice_id in orphan_slice_ids:
+                job.slice_id = None
+                self.fail(job.job_id, "node failure")
+
+    def queued(self) -> List[Job]:
+        return [j for j in self.jobs.values()
+                if j.state in (JobState.QUEUED, JobState.REQUEUED)]

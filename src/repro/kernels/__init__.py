@@ -1,0 +1,7 @@
+"""Pallas TPU kernels (validated on CPU via interpret mode; ``ops`` picks
+kernel vs jnp reference by backend)."""
+from repro.kernels import ops, ref
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.mamba2_chunk import ssd_chunk_scan
+from repro.kernels.stream_matmul import stream_matmul, stream_matmul_batched

@@ -1,0 +1,138 @@
+"""KV-cache decode attention Pallas kernel: one new query token per sequence
+against a (possibly ring-buffered) cache, GQA, online softmax over cache
+blocks. This is the serve_step hot loop (decode_32k / long_500k cells).
+
+Layout: q (B, Hq, D); k/v (B, Hkv, L, D); kpos (B, L) absolute positions
+(-1 = empty); cur (B,) current positions. Grid (B·Hq, L/bk), accumulators in
+VMEM scratch across the cache sweep.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, kpos_ref, cur_ref, o_ref,
+                   acc_ref, m_ref, l_ref, *, n_k: int, scale: float,
+                   window: int):
+    _decode_body(q_ref, k_ref, v_ref, None, None, kpos_ref, cur_ref, o_ref,
+                 acc_ref, m_ref, l_ref, n_k=n_k, scale=scale, window=window)
+
+
+def _decode_kernel_q8(q_ref, k_ref, v_ref, ks_ref, vs_ref, kpos_ref, cur_ref,
+                      o_ref, acc_ref, m_ref, l_ref, *, n_k: int, scale: float,
+                      window: int):
+    """int8-quantized cache variant: k/v arrive as int8 blocks + per-row
+    fp32 scales and are dequantized in VMEM — HBM traffic for the cache
+    sweep is halved vs bf16 (the decode roofline's dominant term)."""
+    _decode_body(q_ref, k_ref, v_ref, ks_ref, vs_ref, kpos_ref, cur_ref,
+                 o_ref, acc_ref, m_ref, l_ref, n_k=n_k, scale=scale,
+                 window=window)
+
+
+def _decode_body(q_ref, k_ref, v_ref, ks_ref, vs_ref, kpos_ref, cur_ref,
+                 o_ref, acc_ref, m_ref, l_ref, *, n_k: int, scale: float,
+                 window: int):
+    ik = pl.program_id(1)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32) * scale        # (D,)
+    k = k_ref[0].astype(jnp.float32)                # (bk, D)
+    v = v_ref[0].astype(jnp.float32)
+    if ks_ref is not None:                          # dequantize in VMEM
+        k = k * ks_ref[0][:, None]
+        v = v * vs_ref[0][:, None]
+    kpos = kpos_ref[0]                              # (bk,)
+    cur = cur_ref[0]                                # scalar
+
+    s = jnp.dot(k, q, preferred_element_type=jnp.float32)   # (bk,)
+    mask = (kpos >= 0) & (kpos <= cur)
+    if window:
+        mask &= (cur - kpos) < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[0]
+    m_new = jnp.maximum(m_prev, jnp.max(s))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[0] = l_ref[0] * alpha + jnp.sum(p)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p[None, :], v, preferred_element_type=jnp.float32)[0]
+    m_ref[0] = m_new
+
+    @pl.when(ik == n_k - 1)
+    def _flush():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[0], 1e-30)).astype(
+            o_ref.dtype)
+
+
+def decode_attention(q, k, v, kpos, cur, *, window: int = 0,
+                     scale: float = 0.0, block_k: int = 512,
+                     k_scale=None, v_scale=None, interpret: bool = False):
+    """q (B, Hq, D); k/v (B, Hkv, L, D); kpos (B, L); cur (B,).
+
+    ``k_scale``/``v_scale`` (B, Hkv, L) enable the int8-cache path: k/v are
+    int8 and dequantized blockwise in VMEM. Returns (B, Hq, D)."""
+    B, Hq, D = q.shape
+    Hkv, L = k.shape[1], k.shape[2]
+    g = Hq // Hkv
+    scale = scale or D ** -0.5
+    bk = min(block_k, L)
+    assert L % bk == 0, (L, bk)
+    grid = (B * Hq, L // bk)
+    quant = k_scale is not None
+
+    def kv_map(h, ik):
+        return ((h // Hq) * Hkv + (h % Hq) // g, ik, 0)
+
+    def kvs_map(h, ik):
+        return ((h // Hq) * Hkv + (h % Hq) // g, ik)
+
+    in_specs = [
+        pl.BlockSpec((1, D), lambda h, ik: (h, 0)),
+        pl.BlockSpec((1, bk, D), kv_map),
+        pl.BlockSpec((1, bk, D), kv_map),
+    ]
+    operands = [q.reshape(B * Hq, D), k.reshape(B * Hkv, L, D),
+                v.reshape(B * Hkv, L, D)]
+    if quant:
+        in_specs += [pl.BlockSpec((1, bk), kvs_map),
+                     pl.BlockSpec((1, bk), kvs_map)]
+        operands += [k_scale.reshape(B * Hkv, L),
+                     v_scale.reshape(B * Hkv, L)]
+        kernel = functools.partial(_decode_kernel_q8, n_k=grid[1],
+                                   scale=scale, window=window)
+    else:
+        kernel = functools.partial(_decode_kernel, n_k=grid[1], scale=scale,
+                                   window=window)
+    in_specs += [
+        pl.BlockSpec((1, bk), lambda h, ik: (h // Hq, ik)),
+        pl.BlockSpec((1,), lambda h, ik: (h // Hq,)),
+    ]
+    operands += [kpos, cur]
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, D), lambda h, ik: (h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * Hq, D),
+                                       q.dtype if not quant else jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((D,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(*operands)
+    return out.reshape(B, Hq, D).astype(q.dtype)

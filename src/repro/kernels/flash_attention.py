@@ -1,0 +1,111 @@
+"""Flash attention (prefill) Pallas kernel: blocked online-softmax causal
+attention with GQA and optional sliding window.
+
+Layout: q (B, Hq, S, D), k/v (B, Hkv, S, D), Hq = G·Hkv.
+Grid (B·Hq, S/bq, S/bk) — the kv block index is minor, so the fp32
+accumulators (acc, m, l) live in VMEM scratch across the kv sweep and each
+output tile is written once. Causal + window masking is computed from block
+offsets with iota; fully-masked kv blocks are skipped via ``pl.when``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  bq: int, bk: int, n_k: int, scale: float, window: int,
+                  softcap: float):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = iq * bq
+    k_start = ik * bk
+    # any overlap with the causal (and window) band?
+    first_allowed_k = q_start - (window - 1) if window else 0
+    relevant = (k_start <= q_start + bq - 1) & \
+        (k_start + bk - 1 >= first_allowed_k)
+
+    @pl.when(relevant)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * scale          # (bq, D)
+        k = k_ref[0].astype(jnp.float32)                  # (bk, D)
+        v = v_ref[0].astype(jnp.float32)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # (bq, bk)
+        if softcap:
+            s = softcap * jnp.tanh(s / softcap)
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = kpos <= qpos
+        if window:
+            mask &= (qpos - kpos) < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]                               # (bq,)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + \
+            jnp.dot(p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ik == n_k - 1)
+    def _flush():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    scale: float = 0.0, softcap: float = 0.0,
+                    block_q: int = 256, block_k: int = 256,
+                    interpret: bool = False):
+    """q (B, Hq, S, D); k, v (B, Hkv, S, D). Returns (B, Hq, S, D)."""
+    assert causal, "kernel implements the causal (decoder) case"
+    B, Hq, S, D = q.shape
+    Hkv = k.shape[1]
+    g = Hq // Hkv
+    scale = scale or D ** -0.5
+    bq = min(block_q, S)
+    bk = min(block_k, S)
+    assert S % bq == 0 and S % bk == 0, (S, bq, bk)
+    qf = q.reshape(B * Hq, S, D)
+    grid = (B * Hq, S // bq, S // bk)
+
+    def kv_map(h, iq, ik):
+        # h = b * Hq + head; the matching kv row is b * Hkv + head // g
+        return ((h // Hq) * Hkv + (h % Hq) // g, ik, 0)
+
+    kf = k.reshape(B * Hkv, S, D)
+    vf = v.reshape(B * Hkv, S, D)
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, bq=bq, bk=bk, n_k=grid[2],
+                          scale=scale, window=window, softcap=softcap),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda h, iq, ik: (h, iq, 0)),
+            pl.BlockSpec((1, bk, D), kv_map),
+            pl.BlockSpec((1, bk, D), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), lambda h, iq, ik: (h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * Hq, S, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, D), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, Hq, S, D)

@@ -1,0 +1,83 @@
+"""Mamba2 SSD chunk-scan Pallas kernel.
+
+One grid row per (batch·head); the chunk index is the minor grid dim so the
+(P, N) SSD state lives in VMEM scratch across the sequential chunk sweep —
+the TPU analogue of the paper-adapted streaming core: HBM traffic per chunk
+is x/B/C/dt in, y out, state never leaves VMEM.
+
+Inputs are pre-expanded per head by the wrapper:
+  x  (BH, S, P)   dt (BH, S)   Bm/Cm (BH, S, N)   a (BH,) negative decay
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, d_ref, y_ref, state_ref,
+                *, Q: int):
+    c_idx = pl.program_id(1)
+
+    @pl.when(c_idx == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0].astype(jnp.float32)            # (Q, P)
+    dt = dt_ref[0].astype(jnp.float32)          # (Q,)
+    Bm = b_ref[0].astype(jnp.float32)           # (Q, N)
+    Cm = c_ref[0].astype(jnp.float32)           # (Q, N)
+    a = a_ref[0]                                # scalar (negative)
+
+    dA = dt * a                                 # (Q,)
+    cums = jnp.cumsum(dA)                       # (Q,)
+    seg = cums[:, None] - cums[None, :]         # (Qi, Qj)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    L = jnp.exp(jnp.where(ii >= jj, seg, -jnp.inf))   # mask pre-exp
+    CB = jnp.dot(Cm, Bm.T, preferred_element_type=jnp.float32)   # (Q, Q)
+    dtx = x * dt[:, None]                       # (Q, P)
+    y_intra = jnp.dot(CB * L, dtx, preferred_element_type=jnp.float32)
+
+    state = state_ref[...]                      # (P, N)
+    y_inter = jnp.exp(cums)[:, None] * jnp.dot(
+        Cm, state.T, preferred_element_type=jnp.float32)          # (Q, P)
+
+    total = cums[-1]
+    decay_out = jnp.exp(total - cums)           # (Q,)
+    contrib = jnp.dot(dtx.T, Bm * decay_out[:, None],
+                      preferred_element_type=jnp.float32)         # (P, N)
+    state_ref[...] = state * jnp.exp(total) + contrib
+
+    y = y_intra + y_inter + d_ref[0] * x
+    y_ref[0] = y.astype(y_ref.dtype)
+
+
+def ssd_chunk_scan(x, dt, Bm, Cm, a, d, *, chunk: int = 256,
+                   interpret: bool = False):
+    """x (BH, S, P); dt (BH, S); Bm/Cm (BH, S, N); a/d (BH,).
+    Returns y (BH, S, P)."""
+    BH, S, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0, (S, Q)
+    grid = (BH, S // Q)
+    return pl.pallas_call(
+        functools.partial(_ssd_kernel, Q=Q),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, Q, P), lambda h, c: (h, c, 0)),
+            pl.BlockSpec((1, Q), lambda h, c: (h, c)),
+            pl.BlockSpec((1, Q, N), lambda h, c: (h, c, 0)),
+            pl.BlockSpec((1, Q, N), lambda h, c: (h, c, 0)),
+            pl.BlockSpec((1,), lambda h, c: (h,)),
+            pl.BlockSpec((1,), lambda h, c: (h,)),
+        ],
+        out_specs=pl.BlockSpec((1, Q, P), lambda h, c: (h, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, P), x.dtype),
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, Bm, Cm, a, d)

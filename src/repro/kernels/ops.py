@@ -1,0 +1,79 @@
+"""Jit'd dispatch wrappers: Pallas kernels on TPU, jnp references elsewhere.
+
+``force`` overrides: "kernel" (compiled pallas), "interpret" (pallas in
+interpret mode — the CPU validation path), "ref" (pure jnp).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+
+from repro.kernels import ref as _ref
+from repro.kernels.decode_attention import decode_attention as _decode_k
+from repro.kernels.flash_attention import flash_attention as _flash_k
+from repro.kernels.mamba2_chunk import ssd_chunk_scan as _ssd_k
+from repro.kernels.stream_matmul import (stream_matmul as _mm_k,
+                                         stream_matmul_batched as _mmb_k)
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _mode(force: Optional[str]) -> str:
+    if force is not None:
+        return force
+    return "kernel" if _on_tpu() else "ref"
+
+
+@functools.partial(jax.jit, static_argnames=("force",))
+def matmul(a, b, force: Optional[str] = None):
+    m = _mode(force)
+    if m == "ref":
+        return _ref.matmul_ref(a, b)
+    return _mm_k(a, b, interpret=(m == "interpret"))
+
+
+@functools.partial(jax.jit, static_argnames=("force",))
+def matmul_batched(a, b, force: Optional[str] = None):
+    m = _mode(force)
+    if m == "ref":
+        return _ref.matmul_batched_ref(a, b)
+    return _mmb_k(a, b, interpret=(m == "interpret"))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("window", "scale", "softcap", "force"))
+def flash_attention(q, k, v, window: int = 0, scale: float = 0.0,
+                    softcap: float = 0.0, force: Optional[str] = None):
+    m = _mode(force)
+    if m == "ref":
+        return _ref.flash_attention_ref(q, k, v, window=window, scale=scale,
+                                        softcap=softcap)
+    return _flash_k(q, k, v, window=window, scale=scale, softcap=softcap,
+                    interpret=(m == "interpret"))
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "force"))
+def ssd_chunk_scan(x, dt, Bm, Cm, a, d, chunk: int = 256,
+                   force: Optional[str] = None):
+    m = _mode(force)
+    if m == "ref":
+        return _ref.ssd_chunk_scan_ref(x, dt, Bm, Cm, a, d)
+    return _ssd_k(x, dt, Bm, Cm, a, d, chunk=chunk,
+                  interpret=(m == "interpret"))
+
+
+@functools.partial(jax.jit, static_argnames=("window", "scale", "force"))
+def decode_attention(q, k, v, kpos, cur, window: int = 0, scale: float = 0.0,
+                     k_scale=None, v_scale=None, force: Optional[str] = None):
+    m = _mode(force)
+    if m == "ref":
+        return _ref.decode_attention_ref(q, k, v, kpos, cur, window=window,
+                                         scale=scale, k_scale=k_scale,
+                                         v_scale=v_scale)
+    return _decode_k(q, k, v, kpos, cur, window=window, scale=scale,
+                     k_scale=k_scale, v_scale=v_scale,
+                     interpret=(m == "interpret"))

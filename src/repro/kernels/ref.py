@@ -1,0 +1,81 @@
+"""Pure-jnp oracles for every kernel (the ground truth tests compare to)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(a, b):
+    return jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32)).astype(a.dtype)
+
+
+def matmul_batched_ref(a, b):
+    return jax.vmap(matmul_ref)(a, b)
+
+
+def flash_attention_ref(q, k, v, *, window: int = 0, scale: float = 0.0,
+                        softcap: float = 0.0):
+    """q (B,Hq,S,D); k/v (B,Hkv,S,D) causal (+optional window)."""
+    B, Hq, S, D = q.shape
+    Hkv = k.shape[1]
+    g = Hq // Hkv
+    scale = scale or D ** -0.5
+    kk = jnp.repeat(k, g, axis=1)
+    vv = jnp.repeat(v, g, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32) * scale,
+                   kk.astype(jnp.float32))
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    mask = kpos <= qpos
+    if window:
+        mask &= (qpos - kpos) < window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      vv.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssd_chunk_scan_ref(x, dt, Bm, Cm, a, d):
+    """Sequential (non-chunked) SSD recurrence. x (BH,S,P); dt (BH,S);
+    Bm/Cm (BH,S,N); a/d (BH,). The exact reference for the chunked kernel."""
+    BH, S, P = x.shape
+    N = Bm.shape[-1]
+
+    def per_row(xr, dtr, br, cr, ar, dr):
+        def step(state, inp):
+            xt, dtt, bt, ct = inp
+            dA = jnp.exp(dtt * ar)
+            state = state * dA + jnp.outer(xt * dtt, bt)     # (P, N)
+            y = state @ ct + dr * xt
+            return state, y
+        _, ys = jax.lax.scan(
+            step, jnp.zeros((P, N), jnp.float32),
+            (xr.astype(jnp.float32), dtr.astype(jnp.float32),
+             br.astype(jnp.float32), cr.astype(jnp.float32)))
+        return ys
+
+    return jax.vmap(per_row)(x, dt, Bm, Cm, a, d).astype(x.dtype)
+
+
+def decode_attention_ref(q, k, v, kpos, cur, *, window: int = 0,
+                         scale: float = 0.0, k_scale=None, v_scale=None):
+    B, Hq, D = q.shape
+    Hkv, L = k.shape[1], k.shape[2]
+    g = Hq // Hkv
+    scale = scale or D ** -0.5
+    if k_scale is not None:
+        k = k.astype(jnp.float32) * k_scale[..., None]
+        v = v.astype(jnp.float32) * v_scale[..., None]
+    kk = jnp.repeat(k, g, axis=1)
+    vv = jnp.repeat(v, g, axis=1)
+    s = jnp.einsum("bhd,bhld->bhl", q.astype(jnp.float32) * scale,
+                   kk.astype(jnp.float32))
+    mask = (kpos >= 0) & (kpos <= cur[:, None])
+    if window:
+        mask &= (cur[:, None] - kpos) < window
+    s = jnp.where(mask[:, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhl,bhld->bhd", p,
+                      vv.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,6 @@
+"""Launchers: mesh definitions, multi-pod dry-run, sweep, train, serve.
+
+NOTE: never import repro.launch.dryrun from library code — importing it
+sets XLA_FLAGS for 512 host devices (it must only run as __main__)."""
+from repro.launch.mesh import (HBM_BYTES_S, ICI_BYTES_S, PEAK_FLOPS_BF16,
+                               chips, make_host_mesh, make_production_mesh)

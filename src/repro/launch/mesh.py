@@ -1,0 +1,45 @@
+"""Production mesh definitions.
+
+``make_production_mesh`` is a FUNCTION (importing this module never touches
+jax device state): the single-pod mesh is 16×16 = 256 chips (TPU v5e pod,
+axes data×model); multi-pod adds a leading "pod" axis (2×16×16 = 512 chips).
+
+Hardware constants for the roofline live here too (TPU v5e).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+# TPU v5e per-chip roofline constants
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+HBM_BYTES_S = 819e9             # bytes/s
+ICI_BYTES_S = 50e9              # bytes/s per link
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devs = jax.devices()
+    if len(devs) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices but only {len(devs)} exist — "
+            "the dry-run entrypoint must set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=512 before "
+            "any jax import")
+    return jax.make_mesh(shape, axes, devices=devs[:n])
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over however many (possibly fake) local devices exist —
+    used by tests and the local trainer."""
+    n = len(jax.devices())
+    if data * model > n:
+        raise ValueError(f"need {data * model} devices, have {n}")
+    devs = np.array(jax.devices()[: data * model]).reshape(data, model)
+    return jax.sharding.Mesh(devs, ("data", "model"))
+
+
+def chips(mesh) -> int:
+    return int(np.prod([mesh.shape[a] for a in mesh.axis_names]))

@@ -1,0 +1,196 @@
+"""Generate EXPERIMENTS.md §Dry-run and §Roofline tables from
+results/dryrun/*.json.
+
+Usage: PYTHONPATH=src python -m repro.launch.report [--out EXPERIMENTS.md]
+(writes markdown fragments to results/report_*.md for manual assembly, or
+prints to stdout)
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+RESULTS_DIR = "results/dryrun"
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+ARCH_ORDER = ["gemma3-1b", "gemma2-9b", "phi3-mini-3.8b", "smollm-135m",
+              "mamba2-370m", "deepseek-v2-lite-16b", "qwen3-moe-30b-a3b",
+              "zamba2-7b", "whisper-tiny", "llava-next-34b"]
+
+
+def load():
+    cells = {}
+    for p in glob.glob(os.path.join(RESULTS_DIR, "*.json")):
+        with open(p) as f:
+            r = json.load(f)
+        mesh = r.get("mesh", "single" if "__single" in p else "multi")
+        mesh = "single" if "16x16" == mesh.replace("pod", "") or \
+            p.endswith("__single.json") else "multi"
+        cells[(r.get("arch"), r.get("shape"), mesh)] = r
+    return cells
+
+
+def _gb(x):
+    return f"{x / 2**30:.2f}"
+
+
+def dryrun_table(cells, mesh: str) -> str:
+    lines = [
+        f"### Mesh: {'16×16 (256 chips)' if mesh == 'single' else '2×16×16 (512 chips)'}",
+        "",
+        "| arch | shape | compile | per-dev GiB (proj. TPU) | fits 16GB | "
+        "HLO GFLOPs/dev | dot GiB/dev | coll. wire GiB/dev | top collective |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            r = cells.get((arch, shape, mesh))
+            if r is None:
+                continue
+            if "skipped" in r:
+                lines.append(f"| {arch} | {shape} | — | — | — | — | — | — | "
+                             f"skipped: {r['skipped'][:45]} |")
+                continue
+            if "error" in r:
+                lines.append(f"| {arch} | {shape} | ERROR | | | | | | "
+                             f"{r['error'][:40]} |")
+                continue
+            pd = r["per_device"]
+            colls = pd.get("collective_breakdown", {})
+            top = max(colls, key=colls.get) if colls else "-"
+            lines.append(
+                f"| {arch} | {shape} | {r['compile_s']:.0f}s "
+                f"| {_gb(r['memory']['projected_tpu_bytes'])} "
+                f"| {'✓' if r['memory']['fits_16GB'] else '✗'} "
+                f"| {pd['flops'] / 1e9:,.0f} "
+                f"| {_gb(pd['dot_bytes'])} "
+                f"| {_gb(pd['collective_wire_bytes'])} "
+                f"| {top} |")
+    return "\n".join(lines)
+
+
+def roofline_table(cells, mesh: str = "single") -> str:
+    lines = [
+        "| arch | shape | compute s | memory s | mem s (flash kernel) | "
+        "collective s | dominant | MODEL_FLOPS | useful ratio | "
+        "roofline frac | next lever |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    levers = {
+        "memory": "cut HBM traffic of the dominant dots (flash-attention "
+                  "kernel / fusion)",
+        "collective": "reshard to cut the top collective (overlap or axis "
+                      "change)",
+        "compute": "raise MXU utilization (already compute-limited)",
+    }
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            r = cells.get((arch, shape, mesh))
+            if r is None or "skipped" in r or "error" in r:
+                continue
+            rl = r["roofline"]
+            lines.append(
+                f"| {arch} | {shape} "
+                f"| {rl['compute_s']:.3g} | {rl['memory_s']:.3g} "
+                f"| {rl.get('memory_s_flash_kernel', rl['memory_s']):.3g} "
+                f"| {rl['collective_s']:.3g} | **{rl['dominant']}** "
+                f"| {rl['model_flops_global']:.3g} "
+                f"| {rl['useful_flops_ratio']:.3f} "
+                f"| {rl['roofline_fraction']:.3f} "
+                f"| {levers[rl['dominant']]} |")
+    return "\n".join(lines)
+
+
+def summary(cells) -> str:
+    n_ok = sum(1 for r in cells.values()
+               if "skipped" not in r and "error" not in r)
+    n_fit = sum(1 for r in cells.values()
+                if "memory" in r and r["memory"]["fits_16GB"])
+    n_skip = sum(1 for r in cells.values() if "skipped" in r)
+    n_err = sum(1 for r in cells.values() if "error" in r)
+    worst = min((r for r in cells.values() if "roofline" in r),
+                key=lambda r: r["roofline"]["roofline_fraction"])
+    most_coll = max((r for r in cells.values() if "roofline" in r),
+                    key=lambda r: r["roofline"]["collective_s"])
+    return (f"- compiled cells: **{n_ok}** (all lower+compile on the "
+            f"production meshes), fits-16GB: **{n_fit}/{n_ok}**, documented "
+            f"skips: {n_skip}, errors: {n_err}\n"
+            f"- worst roofline fraction: {worst['arch']} {worst['shape']} "
+            f"{worst['mesh']} ({worst['roofline']['roofline_fraction']:.3f})\n"
+            f"- most collective-bound: {most_coll['arch']} "
+            f"{most_coll['shape']} {most_coll['mesh']} "
+            f"({most_coll['roofline']['collective_s']:.2f}s wire time)")
+
+
+def load_dir(d):
+    cells = {}
+    for p in glob.glob(os.path.join(d, "*.json")):
+        with open(p) as f:
+            r = json.load(f)
+        mesh = "single" if p.endswith("__single.json") else "multi"
+        cells[(r.get("arch"), r.get("shape"), mesh)] = r
+    return cells
+
+
+def optimized_table(base, opt) -> str:
+    lines = [
+        "| arch | shape | mesh | frac before | frac after | coll s before | "
+        "coll s after | dominant after | scheme |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    schemes = {
+        "smollm-135m": "pure-DP ×256", "whisper-tiny": "pure-DP ×256",
+        "mamba2-370m": "pure-DP ×256",
+        "gemma3-1b": "SP + seq-attn TP", "gemma2-9b": "SP + seq-attn TP",
+        "llava-next-34b": "SP + seq-attn TP",
+        "qwen3-moe-30b-a3b": "SP + seq-attn TP + EP",
+        "phi3-mini-3.8b": "SP (heads TP)",
+        "deepseek-v2-lite-16b": "SP + EP (MLA heads TP)",
+        "zamba2-7b": "SP + SSM head TP",
+    }
+    for key in sorted(opt):
+        o = opt[key]
+        if "roofline" not in o:
+            continue
+        b = base.get(key)
+        if b is None or "roofline" not in b:
+            continue
+        arch, shape, mesh = key
+        lines.append(
+            f"| {arch} | {shape} | {mesh} "
+            f"| {b['roofline']['roofline_fraction']:.4f} "
+            f"| **{o['roofline']['roofline_fraction']:.4f}** "
+            f"| {b['roofline']['collective_s']:.2f} "
+            f"| {o['roofline']['collective_s']:.3f} "
+            f"| {o['roofline']['dominant']} "
+            f"| {schemes.get(arch, '')} |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    cells = load()
+    parts = [
+        "## §Dry-run\n", summary(cells), "\n",
+        dryrun_table(cells, "single"), "\n",
+        dryrun_table(cells, "multi"), "\n",
+        "## §Roofline (single-pod 16×16, per §ROOFLINE formulas)\n",
+        roofline_table(cells, "single"),
+    ]
+    opt = load_dir("results/optimized")
+    if opt:
+        parts += ["\n## §Optimized (post-hillclimb schemes, baseline vs "
+                  "final)\n", optimized_table(cells, opt)]
+    text = "\n".join(parts)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text)
+    else:
+        print(text)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Serving launcher: stands up the BAaaS service for an arch and runs a
+synthetic request workload through the continuous-batching engine.
+
+Example (CPU-runnable):
+  PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m --reduce \
+      --requests 12
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.core import ClusterSpec, Hypervisor
+from repro.models import get_model
+from repro.runtime import BatchingEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduce", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=12)
+    ap.add_argument("--max-len", type=int, default=128)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduce:
+        cfg = reduced(cfg)
+    cfg = cfg.replace(dtype="float32")
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    hv = Hypervisor(ClusterSpec(n_nodes=1, devices_per_node=1))
+    vs = hv.allocate_vslice(f"svc:{cfg.name}", slots=2, service_model="baas")
+    engine = BatchingEngine(model, params, n_slots=args.slots,
+                            max_len=args.max_len)
+    print(f"{cfg.name} service on {vs.slice_id}, {args.slots} slots")
+
+    rng = np.random.default_rng(0)
+    t0 = time.monotonic()
+    reqs = [engine.submit(rng.integers(0, cfg.vocab_size,
+                                       size=rng.integers(2, 9)).tolist(),
+                          max_new_tokens=args.max_new)
+            for _ in range(args.requests)]
+    engine.run_until_idle()
+    wall = time.monotonic() - t0
+    total = sum(len(r.out_tokens) for r in reqs)
+    lat = [(r.finished_at - r.submitted_at) for r in reqs]
+    print(f"{len(reqs)} requests, {total} tokens, {wall:.2f}s wall "
+          f"({total/wall:.1f} tok/s), median latency {np.median(lat)*1e3:.0f} ms")
+    hv.release(vs.slice_id)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+from repro.layers.attention import (AttnOpts, attn_decode, attn_forward,
+                                    fill_kv_cache, init_attention,
+                                    init_kv_cache)
+from repro.layers.embeddings import embed, init_embedding, logits
+from repro.layers.mla import (MLAOpts, fill_mla_cache, init_mla,
+                              init_mla_cache, mla_decode, mla_forward)
+from repro.layers.mlp import init_mlp, mlp_forward
+from repro.layers.moe import MoEOpts, init_moe, moe_forward
+from repro.layers.norms import init_rms_norm, rms_norm, softcap
+from repro.layers.rope import apply_rope
+from repro.layers.ssm import (SSMOpts, init_ssm, init_ssm_cache, ssm_decode,
+                              ssm_forward)

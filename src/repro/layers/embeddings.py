@@ -1,0 +1,31 @@
+"""Token embeddings, LM head, sinusoidal positions (whisper stub frontends)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_embedding(key, vocab: int, d_model: int, dtype=jnp.float32):
+    return {"tok": jax.random.normal(key, (vocab, d_model), dtype)
+            * d_model ** -0.5}
+
+
+def embed(p, tokens, scale_by_dim: bool = False):
+    x = jnp.take(p["tok"], tokens, axis=0)
+    if scale_by_dim:
+        x = x * jnp.asarray(x.shape[-1] ** 0.5, x.dtype)
+    return x
+
+
+def logits(p_embed, h, head=None):
+    """Tied (h @ E^T) or untied (h @ W_head) vocab projection."""
+    w = p_embed["tok"].T if head is None else head
+    return jnp.einsum("bsd,dv->bsv", h, w.astype(h.dtype))
+
+
+def sinusoidal_positions(seq: int, d_model: int, dtype=jnp.float32):
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d_model, 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10000.0, dim / d_model)
+    pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+    return pe[:, :d_model].astype(dtype)

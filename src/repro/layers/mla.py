@@ -1,0 +1,171 @@
+"""Multi-head Latent Attention (DeepSeek-V2) with compressed-latent KV cache.
+
+Prefill/train use the expanded formulation (materialize per-head K/V).
+Decode uses the *absorbed* formulation: queries are projected into latent space
+via W_uk so the cache stays compressed (B, L, kv_lora_rank + rope_dim) — this is
+the faithful DeepSeek serving scheme and is what makes decode_32k × batch=128
+memory-feasible.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MLAConfig
+from repro.layers.norms import rms_norm
+from repro.layers.rope import apply_rope
+
+NEG_INF = -2.3819763e38
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAOpts:
+    n_heads: int
+    cfg: MLAConfig
+    rope_theta: float = 10000.0
+    q_chunk: int = 256
+
+    @property
+    def scale(self) -> float:
+        c = self.cfg
+        return (c.qk_nope_head_dim + c.qk_rope_head_dim) ** -0.5
+
+
+def init_mla(key, d_model: int, opts: MLAOpts, dtype=jnp.float32):
+    c = opts.cfg
+    h = opts.n_heads
+    ks = jax.random.split(key, 5)
+    s = d_model ** -0.5
+    qd = c.qk_nope_head_dim + c.qk_rope_head_dim
+    return {
+        "wq": jax.random.normal(ks[0], (d_model, h, qd), dtype) * s,
+        "w_dkv": jax.random.normal(ks[1], (d_model, c.kv_lora_rank + c.qk_rope_head_dim), dtype) * s,
+        "kv_norm": jnp.zeros((c.kv_lora_rank,), dtype),
+        "w_uk": jax.random.normal(ks[2], (c.kv_lora_rank, h, c.qk_nope_head_dim), dtype) * c.kv_lora_rank ** -0.5,
+        "w_uv": jax.random.normal(ks[3], (c.kv_lora_rank, h, c.v_head_dim), dtype) * c.kv_lora_rank ** -0.5,
+        "wo": jax.random.normal(ks[4], (h, c.v_head_dim, d_model), dtype) * s,
+    }
+
+
+def _project_q(p, x, positions, opts: MLAOpts):
+    """Returns q_nope (B,S,h,nope), q_rope (B,S,h,rope)."""
+    c = opts.cfg
+    q = jnp.einsum("bsd,dhq->bshq", x, p["wq"].astype(x.dtype))
+    q_nope = q[..., : c.qk_nope_head_dim]
+    q_rope = apply_rope(q[..., c.qk_nope_head_dim:], positions, opts.rope_theta)
+    return q_nope, q_rope
+
+
+def _latent(p, x, positions, opts: MLAOpts):
+    """Compressed latent ``c_kv`` (B,S,r) + shared rope key (B,S,rope)."""
+    c = opts.cfg
+    dkv = jnp.einsum("bsd,dr->bsr", x, p["w_dkv"].astype(x.dtype))
+    c_kv = rms_norm(dkv[..., : c.kv_lora_rank], p["kv_norm"], plus_one=False)
+    k_rope = dkv[..., c.kv_lora_rank:][:, :, None, :]          # (B,S,1,rope)
+    k_rope = apply_rope(k_rope, positions, opts.rope_theta)[:, :, 0]
+    return c_kv, k_rope
+
+
+def mla_forward(p, x, positions, opts: MLAOpts):
+    """Expanded-form full-sequence MLA. Returns (y, (c_kv, k_rope))."""
+    c = opts.cfg
+    B, S, _ = x.shape
+    q_nope, q_rope = _project_q(p, x, positions, opts)
+    c_kv, k_rope = _latent(p, x, positions, opts)
+    k_nope = jnp.einsum("bsr,rhn->bshn", c_kv, p["w_uk"].astype(x.dtype))
+    v = jnp.einsum("bsr,rhn->bshn", c_kv, p["w_uv"].astype(x.dtype))
+
+    qc = opts.q_chunk
+    if qc and S > qc and S % qc == 0:
+        y = _chunked(q_nope, q_rope, k_nope, k_rope, v, positions, opts)
+    else:
+        y = _attend(q_nope, q_rope, k_nope, k_rope, v, positions, positions,
+                    None, opts)
+    out = jnp.einsum("bshv,hvd->bsd", y, p["wo"].astype(x.dtype))
+    return out, (c_kv, k_rope)
+
+
+def _attend(q_nope, q_rope, k_nope, k_rope, v, q_pos, k_pos, k_valid,
+            opts: MLAOpts):
+    scores = (jnp.einsum("bqhn,bshn->bhqs", q_nope, k_nope,
+                         preferred_element_type=jnp.float32)
+              + jnp.einsum("bqhr,bsr->bhqs", q_rope, k_rope,
+                           preferred_element_type=jnp.float32))
+    scores = scores * opts.scale
+    mask = q_pos[:, :, None] >= k_pos[:, None, :]
+    if k_valid is not None:
+        mask = mask & k_valid[:, None, :]
+    scores = jnp.where(mask[:, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(v.dtype)
+    return jnp.einsum("bhqs,bshv->bqhv", probs, v)
+
+
+def _chunked(q_nope, q_rope, k_nope, k_rope, v, positions, opts: MLAOpts):
+    from repro.layers.attention import _gather_seq
+    B, S = q_nope.shape[:2]
+    qc = opts.q_chunk
+    k_nope, k_rope, v = map(_gather_seq, (k_nope, k_rope, v))
+
+    def body(_, i):
+        sl = lambda a: jax.lax.dynamic_slice_in_dim(a, i * qc, qc, axis=1)
+        y = _attend(sl(q_nope), sl(q_rope), k_nope, k_rope, v,
+                    sl(positions), positions, None, opts)
+        return None, y
+
+    _, ys = jax.lax.scan(jax.checkpoint(body), None, jnp.arange(S // qc))
+    return jnp.moveaxis(ys, 0, 1).reshape(B, S, opts.n_heads, opts.cfg.v_head_dim)
+
+
+# ---------------------------------------------------------------------------
+# Decode: absorbed formulation, compressed cache
+# ---------------------------------------------------------------------------
+
+def init_mla_cache(batch: int, cache_len: int, opts: MLAOpts, dtype):
+    c = opts.cfg
+    return {
+        "c_kv": jnp.zeros((batch, cache_len, c.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, cache_len, c.qk_rope_head_dim), dtype),
+        "pos": jnp.full((batch, cache_len), -1, jnp.int32),
+    }
+
+
+def fill_mla_cache(cache, c_kv, k_rope, positions):
+    L = cache["c_kv"].shape[1]
+    b = jnp.arange(c_kv.shape[0])[:, None]
+    idx = positions % L
+    return {
+        "c_kv": cache["c_kv"].at[b, idx].set(c_kv),
+        "k_rope": cache["k_rope"].at[b, idx].set(k_rope),
+        "pos": cache["pos"].at[b, idx].set(positions),
+    }
+
+
+def mla_decode(p, x, positions, cache, opts: MLAOpts):
+    """Absorbed decode: scores/values computed in the compressed latent space."""
+    B = x.shape[0]
+    q_nope, q_rope = _project_q(p, x, positions, opts)      # (B,1,h,·)
+    c_kv_t, k_rope_t = _latent(p, x, positions, opts)
+    L = cache["c_kv"].shape[1]
+    b = jnp.arange(B)
+    idx = positions[:, 0] % L
+    cache = {
+        "c_kv": cache["c_kv"].at[b, idx].set(c_kv_t[:, 0]),
+        "k_rope": cache["k_rope"].at[b, idx].set(k_rope_t[:, 0]),
+        "pos": cache["pos"].at[b, idx].set(positions[:, 0]),
+    }
+    # Absorb W_uk into the query: q_lat (B,1,h,r)
+    q_lat = jnp.einsum("bqhn,rhn->bqhr", q_nope, p["w_uk"].astype(x.dtype))
+    scores = (jnp.einsum("bqhr,bsr->bhqs", q_lat, cache["c_kv"],
+                         preferred_element_type=jnp.float32)
+              + jnp.einsum("bqhr,bsr->bhqs", q_rope, cache["k_rope"],
+                           preferred_element_type=jnp.float32)) * opts.scale
+    kpos = cache["pos"]
+    mask = (positions[:, :, None] >= kpos[:, None, :]) & (kpos >= 0)[:, None, :]
+    scores = jnp.where(mask[:, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(x.dtype)
+    o_lat = jnp.einsum("bhqs,bsr->bqhr", probs, cache["c_kv"])   # (B,1,h,r)
+    y = jnp.einsum("bqhr,rhv->bqhv", o_lat, p["w_uv"].astype(x.dtype))
+    out = jnp.einsum("bshv,hvd->bsd", y, p["wo"].astype(x.dtype))
+    return out, cache

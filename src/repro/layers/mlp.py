@@ -1,0 +1,30 @@
+"""Gated MLP (SwiGLU / GeGLU)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _act(name: str):
+    if name == "silu":
+        return jax.nn.silu
+    if name == "gelu":
+        return lambda x: jax.nn.gelu(x, approximate=True)
+    raise ValueError(f"unknown act {name}")
+
+
+def init_mlp(key, d_model: int, d_ff: int, dtype=jnp.float32):
+    kg, ku, kd = jax.random.split(key, 3)
+    s_in, s_out = d_model ** -0.5, d_ff ** -0.5
+    return {
+        "wg": jax.random.normal(kg, (d_model, d_ff), dtype) * s_in,
+        "wu": jax.random.normal(ku, (d_model, d_ff), dtype) * s_in,
+        "wd": jax.random.normal(kd, (d_ff, d_model), dtype) * s_out,
+    }
+
+
+def mlp_forward(p, x, act: str = "silu"):
+    g = jnp.einsum("bsd,df->bsf", x, p["wg"].astype(x.dtype))
+    u = jnp.einsum("bsd,df->bsf", x, p["wu"].astype(x.dtype))
+    h = _act(act)(g) * u
+    return jnp.einsum("bsf,fd->bsd", h, p["wd"].astype(x.dtype))

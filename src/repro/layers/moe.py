@@ -1,0 +1,154 @@
+"""Mixture-of-Experts layer with capacity-based sort-free dispatch.
+
+Dispatch is gather/scatter-based (no one-hot matmuls), so HLO FLOPs stay close
+to the *active* expert FLOPs (E·C ≈ T·top_k·capacity_factor rows of SwiGLU):
+  1. router logits -> top_k experts per token
+  2. position-in-expert via a cumsum over the flattened assignment list
+  3. gather tokens into (E, C, d), run per-expert SwiGLU as a batched einsum
+     (the E dim is the EP-shardable axis), scatter-add back weighted by gate.
+
+Tokens beyond an expert's capacity C are dropped (standard Switch behaviour);
+with capacity_factor 1.25 and balanced routing, drops are rare.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.layers.mlp import _act
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEOpts:
+    cfg: MoEConfig
+    act: str = "silu"
+    norm_topk: bool = True
+
+
+def init_moe(key, d_model: int, opts: MoEOpts, dtype=jnp.float32):
+    c = opts.cfg
+    kr, kg, ku, kd, ks = jax.random.split(key, 5)
+    s_in, s_out = d_model ** -0.5, c.d_expert ** -0.5
+    p = {
+        "router": jax.random.normal(kr, (d_model, c.n_experts), jnp.float32) * s_in,
+        "wg": jax.random.normal(kg, (c.n_experts, d_model, c.d_expert), dtype) * s_in,
+        "wu": jax.random.normal(ku, (c.n_experts, d_model, c.d_expert), dtype) * s_in,
+        "wd": jax.random.normal(kd, (c.n_experts, c.d_expert, d_model), dtype) * s_out,
+    }
+    if c.n_shared:
+        f = c.n_shared * c.d_expert
+        k1, k2, k3 = jax.random.split(ks, 3)
+        p["shared"] = {
+            "wg": jax.random.normal(k1, (d_model, f), dtype) * s_in,
+            "wu": jax.random.normal(k2, (d_model, f), dtype) * s_in,
+            "wd": jax.random.normal(k3, (f, d_model), dtype) * f ** -0.5,
+        }
+    return p
+
+
+def capacity(n_tokens: int, cfg: MoEConfig) -> int:
+    c = int(n_tokens * cfg.top_k * cfg.capacity_factor / cfg.n_experts) + 1
+    return max(4, -(-c // 4) * 4)  # round up to multiple of 4
+
+
+def _ep_constrain(t, n_tail: int):
+    """Pin (D, E, ...) tensors to (dp-axes, "model", ...): gather-based
+    dispatch blocks GSPMD's sharding propagation, so without this the expert
+    einsums replicate E across the model axis (verified: 16× flops + 550 GB
+    of all-gathers per device on qwen3 train_4k). Falls back gracefully when
+    the ambient mesh lacks the axes (CPU tests)."""
+    from jax.sharding import PartitionSpec as P
+    for dp in (("pod", "data"), "data", None):
+        try:
+            return jax.lax.with_sharding_constraint(
+                t, P(dp, "model", *([None] * n_tail)))
+        except Exception:  # noqa: BLE001 - axis not in ambient mesh
+            continue
+    return t
+
+
+def moe_forward(p, x, opts: MoEOpts):
+    """x (B,S,d) -> (y (B,S,d), aux_loss scalar).
+
+    Dispatch is *shard-local*: tokens reshape to (D, Tl) where
+    D = cfg.dp_shards (set by the launcher to the mesh's data-parallel
+    extent) so the position-in-expert cumsum runs inside each shard and
+    GSPMD never inserts cross-shard prefix sums or dispatch-table gathers.
+    Capacity is per shard; expert compute keeps the E dim as the
+    EP-shardable axis: xg (D, E, Cl, d).
+    """
+    c = opts.cfg
+    B, S, d = x.shape
+    T = B * S
+    D = c.dp_shards if T % c.dp_shards == 0 else 1
+    Tl = T // D
+    xf = x.reshape(D, Tl, d)
+    logits = jnp.einsum("dtc,ce->dte", xf.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)                    # (D, Tl, E)
+    gate, expert_idx = jax.lax.top_k(probs, c.top_k)           # (D, Tl, k)
+    if opts.norm_topk:
+        gate = gate / (jnp.sum(gate, axis=-1, keepdims=True) + 1e-9)
+
+    # Load-balance aux loss (Switch): E * sum_e f_e * P_e (global means)
+    me = jnp.mean(probs, axis=(0, 1))                          # (E,)
+    onehot_top1 = jax.nn.one_hot(expert_idx[..., 0], c.n_experts,
+                                 dtype=jnp.float32)
+    fe = jnp.mean(onehot_top1, axis=(0, 1))
+    aux = c.n_experts * jnp.sum(me * fe)
+
+    Cl = capacity(Tl, c)
+    flat_e = expert_idx.reshape(D, Tl * c.top_k)
+    flat_g = gate.reshape(D, Tl * c.top_k).astype(x.dtype)
+    token_id = jnp.repeat(jnp.arange(Tl), c.top_k)              # (Tl*k,)
+
+    # position of each assignment within its expert queue (per shard)
+    onehot = (flat_e[..., None] == jnp.arange(c.n_experts)[None, None, :])
+    pos = jnp.sum(jnp.cumsum(onehot.astype(jnp.int32), axis=1) * onehot,
+                  axis=-1) - 1                                  # (D, Tl*k)
+    keep = pos < Cl
+
+    # Dispatch/gather/scatter are vmapped over the shard dim D so it stays a
+    # *batch* dim of the scatter/gather ops — explicit D indices would make
+    # GSPMD replicate the (D, Tl, d) tensors and all-reduce them (verified:
+    # 8.6 GB all-reduces per layer pass on qwen3 train_4k).
+    row = jnp.where(keep, flat_e, c.n_experts)   # OOB row = dropped
+    col = jnp.where(keep, pos, 0)
+
+    def dispatch_one(row1, col1, gate1):
+        # (Tl*k,) -> disp (E, Cl) token ids (Tl = pad sentinel), gates (E, Cl)
+        disp1 = jnp.full((c.n_experts, Cl), Tl, jnp.int32)
+        disp1 = disp1.at[row1, col1].set(token_id, mode="drop")
+        g1 = jnp.zeros((c.n_experts, Cl), x.dtype)
+        g1 = g1.at[row1, col1].set(gate1, mode="drop")
+        return disp1, g1
+
+    disp, gates_ec = jax.vmap(dispatch_one)(row, col, flat_g)
+
+    xpad = jnp.concatenate([xf, jnp.zeros((D, 1, d), x.dtype)], axis=1)
+    xg = jax.vmap(lambda xp, dp1: xp[dp1.reshape(-1)])(xpad, disp)
+    xg = _ep_constrain(xg.reshape(D, c.n_experts, Cl, d), 2)
+
+    act = _act(opts.act)
+    h = act(jnp.einsum("xecd,edf->xecf", xg, p["wg"].astype(x.dtype))) \
+        * jnp.einsum("xecd,edf->xecf", xg, p["wu"].astype(x.dtype))
+    h = _ep_constrain(h, 2)
+    y = jnp.einsum("xecf,efd->xecd", h, p["wd"].astype(x.dtype))
+    y = _ep_constrain(y, 2)
+    y = y * _ep_constrain(gates_ec, 1)[..., None]
+
+    out = jax.vmap(
+        lambda y1, dp1: jnp.zeros((Tl + 1, d), x.dtype)
+        .at[dp1.reshape(-1)].add(y1.reshape(-1, d)))(y, disp)
+    out = out[:, :Tl]
+
+    if c.n_shared:
+        sp = p["shared"]
+        xfl = xf.reshape(T, d)
+        g = act(xfl @ sp["wg"].astype(x.dtype)) \
+            * (xfl @ sp["wu"].astype(x.dtype))
+        out = out.reshape(T, d) + g @ sp["wd"].astype(x.dtype)
+
+    return out.reshape(B, S, d), aux

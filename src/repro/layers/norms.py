@@ -1,0 +1,28 @@
+"""Normalization layers (pure functions over param pytrees)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x, weight, eps: float = 1e-6, *, plus_one: bool = True):
+    """RMSNorm. ``plus_one`` follows gemma convention (weight stored as w-1)."""
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    x32 = x32 * jax.lax.rsqrt(var + eps)
+    w = weight.astype(jnp.float32)
+    if plus_one:
+        w = w + 1.0
+    return (x32 * w).astype(dtype)
+
+
+def init_rms_norm(dim: int, dtype=jnp.float32):
+    return {"scale": jnp.zeros((dim,), dtype=dtype)}
+
+
+def softcap(x, cap: float):
+    """Gemma-style logit soft-capping: cap * tanh(x / cap)."""
+    if not cap:
+        return x
+    return cap * jnp.tanh(x / cap)

@@ -1,0 +1,26 @@
+"""Rotary position embeddings."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rope_freqs(head_dim: int, theta: float):
+    """Inverse frequencies, shape (head_dim//2,)."""
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponent)
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """Rotate ``x`` of shape (..., seq, heads, head_dim) by ``positions`` (..., seq).
+
+    Uses the split-halves convention (llama/gemma): the head_dim is split into
+    two halves rather than interleaved pairs.
+    """
+    head_dim = x.shape[-1]
+    inv = rope_freqs(head_dim, theta)                      # (hd/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * inv  # (..., seq, hd/2)
+    sin = jnp.sin(ang)[..., :, None, :]                    # (..., seq, 1, hd/2)
+    cos = jnp.cos(ang)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)

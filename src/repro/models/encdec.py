@@ -1,0 +1,216 @@
+"""Encoder-decoder model (whisper-tiny backbone).
+
+The conv/mel frontend is a STUB per the assignment: inputs are precomputed
+frame embeddings (B, F, d_model). Sinusoidal positions replace whisper's
+learned embeddings (documented deviation, DESIGN.md §4).
+
+decode_32k semantics for enc-dec: the 32k context is the *encoder output*
+(cross-attention KV cache); decoder self-attention is bounded at
+``dec_max_len`` (448), faithful to whisper's decoding window.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ATTN_GLOBAL, ModelConfig
+from repro.layers.attention import (attn_decode, attn_forward, fill_kv_cache,
+                                    init_attention, init_kv_cache)
+from repro.layers.embeddings import embed, init_embedding, sinusoidal_positions
+from repro.layers.mlp import init_mlp, mlp_forward
+from repro.layers.norms import rms_norm
+from repro.models.stages import LayerSite, attn_opts
+
+DEC_MAX_LEN = 448
+
+
+def _enc_cfg(cfg: ModelConfig) -> ModelConfig:
+    return cfg.replace(causal=False, use_rope=False,
+                       n_layers=cfg.encoder.n_layers)
+
+
+def _site(cfg) -> LayerSite:
+    return LayerSite(ATTN_GLOBAL, "dense", cfg.d_ff, cfg.rope_theta)
+
+
+def init_encdec(cfg: ModelConfig, key) -> dict:
+    pdt = jnp.dtype(cfg.param_dtype)
+    ecfg = _enc_cfg(cfg)
+    n_enc, n_dec = cfg.encoder.n_layers, cfg.n_layers
+    keys = jax.random.split(key, 8)
+
+    def enc_layer(k):
+        k1, k2 = jax.random.split(k)
+        return {
+            "norm1": jnp.zeros((cfg.d_model,), pdt),
+            "norm2": jnp.zeros((cfg.d_model,), pdt),
+            "attn": init_attention(k1, cfg.d_model, attn_opts(ecfg, _site(ecfg)), pdt),
+            "mlp": init_mlp(k2, cfg.d_model, cfg.d_ff, pdt),
+        }
+
+    def dec_layer(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return {
+            "norm1": jnp.zeros((cfg.d_model,), pdt),
+            "norm2": jnp.zeros((cfg.d_model,), pdt),
+            "norm3": jnp.zeros((cfg.d_model,), pdt),
+            "self_attn": init_attention(k1, cfg.d_model, attn_opts(cfg, _site(cfg)), pdt),
+            "cross_attn": init_attention(k2, cfg.d_model, attn_opts(ecfg, _site(ecfg)), pdt),
+            "mlp": init_mlp(k3, cfg.d_model, cfg.d_ff, pdt),
+        }
+
+    return {
+        "embed": init_embedding(keys[0], cfg.vocab_size, cfg.d_model, pdt),
+        "enc_layers": jax.vmap(enc_layer)(jax.random.split(keys[1], n_enc)),
+        "enc_norm": jnp.zeros((cfg.d_model,), pdt),
+        "dec_layers": jax.vmap(dec_layer)(jax.random.split(keys[2], n_dec)),
+        "final_norm": jnp.zeros((cfg.d_model,), pdt),
+    }
+
+
+def encode(cfg: ModelConfig, params, frames):
+    """frames (B, F, d_model) precomputed embeddings -> (B, F, d_model)."""
+    ecfg = _enc_cfg(cfg)
+    dt = jnp.dtype(cfg.dtype)
+    B, F, _ = frames.shape
+    x = frames.astype(dt) + sinusoidal_positions(F, cfg.d_model, dt)[None]
+    pos = jnp.broadcast_to(jnp.arange(F, dtype=jnp.int32)[None], (B, F))
+    opts = attn_opts(ecfg, _site(ecfg))
+
+    def body(x, p):
+        h = rms_norm(x, p["norm1"])
+        y, _ = attn_forward(p["attn"], h, pos, opts)
+        x = x + y
+        h = rms_norm(x, p["norm2"])
+        return x + mlp_forward(p["mlp"], h, cfg.act), None
+
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return rms_norm(x, params["enc_norm"])
+
+
+def decoder_forward(cfg: ModelConfig, params, tokens, enc_out):
+    """Teacher-forced decoder. tokens (B, St). Returns hidden (B, St, d)."""
+    dt = jnp.dtype(cfg.dtype)
+    B, St = tokens.shape
+    F = enc_out.shape[1]
+    x = embed(params["embed"], tokens).astype(dt)
+    x = x + sinusoidal_positions(St, cfg.d_model, dt)[None]
+    pos = jnp.broadcast_to(jnp.arange(St, dtype=jnp.int32)[None], (B, St))
+    enc_pos = jnp.broadcast_to(jnp.arange(F, dtype=jnp.int32)[None], (B, F))
+    self_opts = attn_opts(cfg, _site(cfg))
+    cross_opts = attn_opts(_enc_cfg(cfg), _site(_enc_cfg(cfg)))
+
+    def body(x, p):
+        h = rms_norm(x, p["norm1"])
+        y, _ = attn_forward(p["self_attn"], h, pos, self_opts)
+        x = x + y
+        h = rms_norm(x, p["norm2"])
+        y, _ = attn_forward(p["cross_attn"], h, pos, cross_opts,
+                            kv_src=enc_out, kv_pos=enc_pos)
+        x = x + y
+        h = rms_norm(x, p["norm3"])
+        return x + mlp_forward(p["mlp"], h, cfg.act), None
+
+    x, _ = jax.lax.scan(body, x, params["dec_layers"])
+    return rms_norm(x, params["final_norm"])
+
+
+def encdec_forward(cfg: ModelConfig, params, frames, tokens, remat=False):
+    """Full training forward. Returns (hidden, aux=0)."""
+    enc_out = encode(cfg, params, frames)
+    h = decoder_forward(cfg, params, tokens, enc_out)
+    return h, jnp.zeros((), jnp.float32)
+
+
+def encdec_logits(cfg: ModelConfig, params, h):
+    w = params["embed"]["tok"].T
+    return jnp.einsum("bsd,dv->bsv", h, w.astype(h.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+def encdec_prefill(cfg: ModelConfig, params, frames, prompt):
+    """Encode + run decoder prompt; build self- and cross-attention caches."""
+    dt = jnp.dtype(cfg.dtype)
+    enc_out = encode(cfg, params, frames)
+    B, F, _ = enc_out.shape
+    enc_pos = jnp.broadcast_to(jnp.arange(F, dtype=jnp.int32)[None], (B, F))
+    St = prompt.shape[1]
+    x = embed(params["embed"], prompt).astype(dt)
+    x = x + sinusoidal_positions(St, cfg.d_model, dt)[None]
+    pos = jnp.broadcast_to(jnp.arange(St, dtype=jnp.int32)[None], (B, St))
+    self_opts = attn_opts(cfg, _site(cfg))
+    cross_opts = attn_opts(_enc_cfg(cfg), _site(_enc_cfg(cfg)))
+
+    def body(x, p):
+        h = rms_norm(x, p["norm1"])
+        y, (k, v) = attn_forward(p["self_attn"], h, pos, self_opts)
+        sc = fill_kv_cache(
+            init_kv_cache(B, DEC_MAX_LEN, self_opts, dt), k, v, pos)
+        x = x + y
+        h = rms_norm(x, p["norm2"])
+        y, (ck, cv) = attn_forward(p["cross_attn"], h, pos, cross_opts,
+                                   kv_src=enc_out, kv_pos=enc_pos)
+        x = x + y
+        h = rms_norm(x, p["norm3"])
+        x = x + mlp_forward(p["mlp"], h, cfg.act)
+        return x, {"self": sc, "cross_k": ck, "cross_v": cv}
+
+    x, caches = jax.lax.scan(body, x, params["dec_layers"])
+    return rms_norm(x, params["final_norm"]), caches
+
+
+def make_encdec_caches(cfg: ModelConfig, batch: int, enc_len: int):
+    """Empty cache pytree for dry-run specs (cross KV over enc_len)."""
+    dt = jnp.dtype(cfg.dtype)
+    self_opts = attn_opts(cfg, _site(cfg))
+    L = cfg.n_layers
+    one_self = init_kv_cache(batch, DEC_MAX_LEN, self_opts, dt)
+    return {
+        "self": jax.tree.map(
+            lambda a: jnp.zeros((L,) + a.shape, a.dtype), one_self),
+        "cross_k": jnp.zeros((L, batch, enc_len, cfg.n_kv_heads,
+                              cfg.resolved_head_dim), dt),
+        "cross_v": jnp.zeros((L, batch, enc_len, cfg.n_kv_heads,
+                              cfg.resolved_head_dim), dt),
+    }
+
+
+def encdec_decode(cfg: ModelConfig, params, caches, tokens, pos):
+    """One decode token against self cache + fixed cross KV."""
+    dt = jnp.dtype(cfg.dtype)
+    B = tokens.shape[0]
+    x = embed(params["embed"], tokens).astype(dt)
+    posc = jnp.clip(pos, 0, DEC_MAX_LEN - 1)
+    x = x + sinusoidal_positions(DEC_MAX_LEN, cfg.d_model, dt)[posc][:, None]
+    positions = pos[:, None].astype(jnp.int32)
+    self_opts = attn_opts(cfg, _site(cfg))
+    cross_opts = attn_opts(_enc_cfg(cfg), _site(_enc_cfg(cfg)))
+    F = caches["cross_k"].shape[2]
+
+    def body(x, inp):
+        p, sc, ck, cv = inp
+        h = rms_norm(x, p["norm1"])
+        y, sc = attn_decode(p["self_attn"], h, positions, sc, self_opts)
+        x = x + y
+        h = rms_norm(x, p["norm2"])
+        # cross attention: fixed cache, all positions valid
+        cross_cache = {"k": ck, "v": cv,
+                       "pos": jnp.broadcast_to(
+                           jnp.arange(F, dtype=jnp.int32)[None], (B, F))}
+        y, _ = attn_decode(p["cross_attn"], h, positions, cross_cache,
+                           cross_opts, update_cache=False)
+        x = x + y
+        h = rms_norm(x, p["norm3"])
+        x = x + mlp_forward(p["mlp"], h, cfg.act)
+        return x, sc
+
+    x, new_self = jax.lax.scan(
+        body, x, (params["dec_layers"], caches["self"],
+                  caches["cross_k"], caches["cross_v"]))
+    h = rms_norm(x, params["final_norm"])
+    logits = encdec_logits(cfg, params, h)
+    return logits, {"self": new_self, "cross_k": caches["cross_k"],
+                    "cross_v": caches["cross_v"]}

@@ -1,0 +1,81 @@
+"""AdamW + schedules + global-norm clipping (self-contained, no optax)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_ratio: float = 0.1
+
+
+def schedule(cfg: AdamWConfig, step):
+    """Linear warmup + cosine decay to min_lr_ratio."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    frac = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    return cfg.lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+
+def init_opt_state(params):
+    zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return {"mu": jax.tree.map(zeros, params),
+            "nu": jax.tree.map(zeros, params),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads), norm
+
+
+def adamw_update(cfg: AdamWConfig, grads, opt_state, params):
+    """Returns (new_params, new_opt_state, metrics)."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    count = opt_state["count"] + 1
+    lr = schedule(cfg, count)
+    b1, b2 = cfg.b1, cfg.b2
+
+    def upd(g, mu, nu, p):
+        g32 = g.astype(jnp.float32)
+        mu = b1 * mu + (1 - b1) * g32
+        nu = b2 * nu + (1 - b2) * jnp.square(g32)
+        mu_hat = mu / (1 - b1 ** count.astype(jnp.float32))
+        nu_hat = nu / (1 - b2 ** count.astype(jnp.float32))
+        step = mu_hat / (jnp.sqrt(nu_hat) + cfg.eps)
+        p32 = p.astype(jnp.float32)
+        p32 = p32 - lr * (step + cfg.weight_decay * p32)
+        return p32.astype(p.dtype), mu, nu
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_mu = treedef.flatten_up_to(opt_state["mu"])
+    flat_nu = treedef.flatten_up_to(opt_state["nu"])
+    flat_p = treedef.flatten_up_to(params)
+    out = [upd(g, m, n, p)
+           for g, m, n, p in zip(flat_g, flat_mu, flat_nu, flat_p)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_mu = treedef.unflatten([o[1] for o in out])
+    new_nu = treedef.unflatten([o[2] for o in out])
+    return new_p, {"mu": new_mu, "nu": new_nu, "count": count}, \
+        {"grad_norm": gnorm, "lr": lr}

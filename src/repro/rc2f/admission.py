@@ -1,0 +1,46 @@
+"""Admission checks for RAaaS user cores — the paper's planned "sanity
+checking for (partial) bitfiles" (§VI), realized as abstract evaluation:
+the core must trace successfully against its declared stream shapes, touch
+no out-of-contract state, and produce finite-sized outputs."""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+
+
+class AdmissionError(RuntimeError):
+    pass
+
+
+MAX_OUTPUT_BYTES = 16 << 30      # per block, per slice
+MAX_INTERMEDIATE_RATIO = 1024    # outputs can't explode vs inputs
+
+
+def admit_core(core_fn: Callable, example_inputs) -> None:
+    """Abstract-eval the core against declared shapes (no FLOPs spent).
+
+    Raises AdmissionError on contract violations — the analogue of rejecting
+    a tampered bitstream before it touches the device.
+    """
+    try:
+        out = jax.eval_shape(core_fn, *example_inputs) \
+            if isinstance(example_inputs, tuple) \
+            else jax.eval_shape(core_fn, example_inputs)
+    except Exception as e:  # noqa: BLE001
+        raise AdmissionError(f"core failed abstract evaluation: {e}") from e
+
+    in_bytes = sum(_nbytes(x) for x in jax.tree.leaves(example_inputs))
+    out_bytes = sum(_nbytes(x) for x in jax.tree.leaves(out))
+    if out_bytes > MAX_OUTPUT_BYTES:
+        raise AdmissionError(
+            f"core output {out_bytes} bytes exceeds per-slice limit")
+    if in_bytes and out_bytes > MAX_INTERMEDIATE_RATIO * in_bytes:
+        raise AdmissionError(
+            f"core amplifies {in_bytes}B -> {out_bytes}B (> x{MAX_INTERMEDIATE_RATIO})")
+
+
+def _nbytes(aval) -> int:
+    import numpy as np
+    return int(np.prod(aval.shape)) * aval.dtype.itemsize if aval.shape else \
+        aval.dtype.itemsize

@@ -1,0 +1,68 @@
+"""RC2F user-core API (paper §IV-D/E).
+
+A *user core* is the RAaaS tenant's compute kernel: a pure function over
+input streams, declared with its stream shapes. ``compile_core`` is the HLS
+analogue — it takes the user's plain Python/JAX function ("C function") and
+produces a shell-compatible jitted core ("RTL") with the standard FIFO
+interface: f(ucs_registers, *stream_blocks) -> stream_blocks.
+
+The CUDA/OpenCL-inspired host API (paper §IV-D2) groups calls into
+  (a) device control / status        -> Hypervisor.status / ConfigSpace
+  (b) kernel control / reconfigure   -> deploy / swap on RAaaSSession
+  (c) data transfers                 -> StreamFIFO / OutputFIFO
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamSpec:
+    """Declared shape/dtype of one FIFO block."""
+    shape: Tuple[int, ...]
+    dtype: str = "float32"
+
+    def aval(self):
+        return jax.ShapeDtypeStruct(self.shape, jnp.dtype(self.dtype))
+
+
+@dataclasses.dataclass(frozen=True)
+class CoreSpec:
+    """The user core's declared interface (the HLS pragma block)."""
+    name: str
+    in_streams: Tuple[StreamSpec, ...]
+    out_streams: Tuple[StreamSpec, ...]
+    flops_per_block: float = 0.0      # for placement/roofline accounting
+
+    def example_inputs(self):
+        return tuple(s.aval() for s in self.in_streams)
+
+
+def compile_core(user_fn: Callable, spec: CoreSpec,
+                 donate_inputs: bool = False) -> Callable:
+    """'HLS synthesis': wrap the user function into the shell calling
+    convention and jit it. The wrapped core takes (ucs, *blocks)."""
+
+    def core(ucs: Dict[str, jnp.ndarray], *blocks):
+        out = user_fn(*blocks, **({"ucs": ucs} if _wants_ucs(user_fn) else {}))
+        if not isinstance(out, tuple):
+            out = (out,)
+        return out
+
+    core.__name__ = f"rc2f_core_{spec.name}"
+    jit_kwargs = {}
+    if donate_inputs:
+        jit_kwargs["donate_argnums"] = tuple(range(1, 1 + len(spec.in_streams)))
+    return jax.jit(core, **jit_kwargs)
+
+
+def _wants_ucs(fn: Callable) -> bool:
+    import inspect
+    try:
+        return "ucs" in inspect.signature(fn).parameters
+    except (TypeError, ValueError):
+        return False

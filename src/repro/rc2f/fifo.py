@@ -1,0 +1,152 @@
+"""RC2F streaming FIFOs (paper §IV-D2) + shared-link contention model.
+
+The paper's Xillybus PCIe core gives each vFPGA an in/out FIFO pair, all
+sharing one 800 MB/s host link; Table II/III measure how per-core throughput
+collapses as 1→2→4 cores share it. Here:
+
+  * ``StreamFIFO`` is the host-side double-buffered queue feeding a device
+    program (``device_put`` prefetch thread = the asynchronous FIFO that
+    "divides the system clock from the user clock").
+  * ``SharedLink`` is an accounting model of the scarce interconnect: every
+    transfer reserves bandwidth over a time interval; concurrent reservations
+    split it fairly. It reproduces the paper's contention numbers exactly and
+    is what benchmarks/table2_shell.py and table3_matmul.py sweep.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Iterable, List, Optional
+
+import jax
+import numpy as np
+
+PCIE_LINK_BYTES_S = 800e6          # paper's Xillybus limit
+TPU_HOST_LINK_BYTES_S = 32e9       # realistic host->HBM ingestion per host
+TPU_ICI_BYTES_S = 50e9             # per ICI link (roofline constant)
+
+
+# ---------------------------------------------------------------------------
+# Analytic shared-link model (used by benchmarks; deterministic)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class SharedLink:
+    """Fair-share bandwidth accounting for N concurrent streams."""
+    bandwidth_bytes_s: float = PCIE_LINK_BYTES_S
+
+    def stream_time_s(self, bytes_per_stream: float, n_streams: int) -> float:
+        """Wall time for n identical concurrent streams to move their bytes
+        over the fair-shared link."""
+        if n_streams <= 0:
+            return 0.0
+        return bytes_per_stream / (self.bandwidth_bytes_s / n_streams)
+
+    def per_stream_throughput(self, n_streams: int) -> float:
+        return self.bandwidth_bytes_s / max(n_streams, 1)
+
+
+def core_throughput(compute_bytes_s: float, link: SharedLink,
+                    n_streams: int) -> float:
+    """Effective per-core streaming throughput when a compute-bound core
+    (processing ``compute_bytes_s``) shares the link with n-1 peers.
+
+    This is the paper's Table III model: min(compute rate, fair link share).
+    """
+    return min(compute_bytes_s, link.per_stream_throughput(n_streams))
+
+
+# ---------------------------------------------------------------------------
+# Host-side streaming FIFO (double-buffered prefetch)
+# ---------------------------------------------------------------------------
+
+class StreamFIFO:
+    """Bounded FIFO moving host arrays to device ahead of consumption.
+
+    ``depth`` plays the role of the BRAM FIFO depth; a background thread
+    performs ``jax.device_put`` so compute and transfer overlap (the
+    asynchronous clock-domain crossing of the paper's design).
+    """
+
+    def __init__(self, depth: int = 2, device=None,
+                 sharding: Optional[Any] = None):
+        self.depth = depth
+        self.device = device
+        self.sharding = sharding
+        self._q: "queue.Queue" = queue.Queue(maxsize=depth)
+        self._closed = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        self.bytes_in = 0
+        self.items_in = 0
+
+    def _put_target(self, item):
+        if self.sharding is not None:
+            return jax.device_put(item, self.sharding)
+        if self.device is not None:
+            return jax.device_put(item, self.device)
+        return jax.device_put(item)
+
+    def feed(self, iterable: Iterable):
+        """Start the producer thread over ``iterable``."""
+        def run():
+            for item in iterable:
+                if self._closed.is_set():
+                    return
+                dev_item = self._put_target(item)
+                self.bytes_in += sum(
+                    np.asarray(x).nbytes for x in jax.tree.leaves(item))
+                self.items_in += 1
+                self._q.put(dev_item)
+            self._q.put(_EOS)
+        self._thread = threading.Thread(target=run, daemon=True)
+        self._thread.start()
+        return self
+
+    def get(self, timeout: float = 60.0):
+        item = self._q.get(timeout=timeout)
+        if item is _EOS:
+            raise StopIteration
+        return item
+
+    def __iter__(self):
+        while True:
+            try:
+                yield self.get()
+            except StopIteration:
+                return
+
+    def close(self):
+        self._closed.set()
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass
+
+
+class _EOSType:
+    pass
+
+
+_EOS = _EOSType()
+
+
+class OutputFIFO:
+    """Device->host result queue with async host fetch."""
+
+    def __init__(self, depth: int = 2):
+        self._q: "queue.Queue" = queue.Queue(maxsize=depth)
+        self.bytes_out = 0
+
+    def put(self, item):
+        item = jax.tree.map(np.asarray, item)   # blocks until ready
+        self.bytes_out += sum(x.nbytes for x in jax.tree.leaves(item))
+        self._q.put(item)
+
+    def get(self, timeout: float = 60.0):
+        return self._q.get(timeout=timeout)
+
+    def empty(self) -> bool:
+        return self._q.empty()

@@ -1,0 +1,155 @@
+"""RC2F shell: hosts up to four isolated user cores on one physical device
+(paper §IV-D1, Fig. 4).
+
+Two co-residency modes, both real on TPU:
+
+  * ``FusedShell`` — the honest analogue of N partial-reconfiguration regions
+    inside one bitstream: one SPMD program executes all resident cores each
+    "shell cycle" (their HLO is independent → XLA schedules them in
+    parallel); they share the device's HBM bandwidth exactly as the paper's
+    cores share the PCIe link. Swapping one core = recompiling this fused
+    program (fast via the PR cache) while state of other cores persists.
+
+  * ``SpatialShell`` — vSlices as disjoint sub-meshes of the physical mesh
+    (stronger isolation; each slice has its own executable). Used by the
+    launcher at pod scale; on this host it degrades to slot bookkeeping over
+    the single CPU device.
+
+The shell also owns the gcs and one ucs per slot.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.device_db import MAX_SLOTS
+from repro.rc2f.control import ConfigSpace, device_registers, make_gcs, make_ucs
+from repro.rc2f.core_api import CoreSpec, compile_core
+
+
+@dataclasses.dataclass
+class _Slot:
+    core_fn: Optional[Callable] = None     # uncompiled shell-convention core
+    spec: Optional[CoreSpec] = None
+    ucs: Optional[ConfigSpace] = None
+    user: Optional[str] = None
+
+
+class FusedShell:
+    """N co-resident cores fused into one program sharing the device."""
+
+    def __init__(self, n_slots: int = MAX_SLOTS):
+        assert 1 <= n_slots <= MAX_SLOTS
+        self.n_slots = n_slots
+        self.gcs = make_gcs()
+        self.slots: List[_Slot] = [_Slot() for _ in range(n_slots)]
+        self._fused = None           # compiled fused program
+        self._dirty = True
+
+    # ---------------- slot management (PR regions) ----------------
+    def load(self, slot: int, user_fn: Callable, spec: CoreSpec,
+             user: str = "anon"):
+        """Partial reconfiguration of one region: only the fused program is
+        re-jitted; other slots' cores are untouched."""
+        s = self.slots[slot]
+        s.core_fn, s.spec, s.user = user_fn, spec, user
+        s.ucs = make_ucs()
+        self._dirty = True
+        self.gcs.write("active_mask",
+                       self.gcs.read("active_mask") | (1 << slot))
+        self.gcs.write("clock_enable", 1)
+
+    def unload(self, slot: int):
+        self.slots[slot] = _Slot()
+        self._dirty = True
+        mask = self.gcs.read("active_mask") & ~(1 << slot)
+        self.gcs.write("active_mask", mask)
+        if mask == 0:
+            self.gcs.write("clock_enable", 0)   # park: gate clocks
+
+    def active_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if s.core_fn is not None]
+
+    # ---------------- fused execution ----------------
+    def _build(self):
+        active = self.active_slots()
+        fns = [compile_core(self.slots[i].core_fn, self.slots[i].spec)
+               for i in active]
+
+        def fused(reg_trees, all_blocks):
+            outs = []
+            for fn, regs, blocks in zip(fns, reg_trees, all_blocks):
+                outs.append(fn(regs, *blocks))
+            return tuple(outs)
+
+        self._fused = fused
+        self._dirty = False
+
+    def run_cycle(self, inputs: Dict[int, Tuple]) -> Dict[int, Tuple]:
+        """One shell cycle: every active core consumes one block from its
+        input FIFOs. ``inputs`` maps slot -> tuple of stream blocks."""
+        active = self.active_slots()
+        if set(inputs) != set(active):
+            raise ValueError(f"inputs for slots {sorted(inputs)} but active "
+                             f"slots are {active}")
+        if self._dirty:
+            self._build()
+        regs = []
+        blocks = []
+        for i in active:
+            ucs_snap = self.slots[i].ucs.snapshot()
+            regs.append({k: jnp.asarray(v, jnp.int32)
+                         for k, v in ucs_snap.items()})
+            blocks.append(inputs[i])
+        outs = self._fused(regs, blocks)
+        self.gcs.write("step_counter", self.gcs.read("step_counter") + 1)
+        return {slot: out for slot, out in zip(active, outs)}
+
+    # ---------------- accounting ----------------
+    def shell_overhead_bytes(self) -> int:
+        """Device-side footprint of the shell itself (gcs + ucs replicas +
+        FIFO staging) — Table II's 'framework resources' analogue."""
+        gcs_bytes = len(self.gcs.snapshot()) * 4
+        ucs_bytes = sum(len(s.ucs.snapshot()) * 4 for s in self.slots
+                        if s.ucs is not None)
+        return gcs_bytes + ucs_bytes
+
+
+class SpatialShell:
+    """vSlices as disjoint sub-meshes of a physical device's chip grid."""
+
+    def __init__(self, devices: Optional[Sequence] = None,
+                 n_slots: int = MAX_SLOTS):
+        self.devices = list(devices if devices is not None else jax.devices())
+        self.n_slots = n_slots
+        self.gcs = make_gcs()
+        per = max(1, len(self.devices) // n_slots)
+        self._groups = [self.devices[i * per:(i + 1) * per] or
+                        [self.devices[i % len(self.devices)]]
+                        for i in range(n_slots)]
+        self.slots: List[_Slot] = [_Slot() for _ in range(n_slots)]
+        self._compiled: Dict[int, Callable] = {}
+
+    def slot_mesh(self, slot: int, axis: str = "slice"):
+        devs = np.array(self._groups[slot])
+        return jax.sharding.Mesh(devs, (axis,))
+
+    def load(self, slot: int, user_fn: Callable, spec: CoreSpec,
+             user: str = "anon"):
+        s = self.slots[slot]
+        s.core_fn, s.spec, s.user = user_fn, spec, user
+        s.ucs = make_ucs()
+        core = compile_core(user_fn, spec)
+        self._compiled[slot] = core
+        self.gcs.write("active_mask",
+                       self.gcs.read("active_mask") | (1 << slot))
+
+    def run(self, slot: int, *blocks):
+        s = self.slots[slot]
+        regs = {k: jnp.asarray(v, jnp.int32)
+                for k, v in s.ucs.snapshot().items()}
+        return self._compiled[slot](regs, *blocks)

@@ -1,0 +1,53 @@
+"""Losses. The vocab projection is fused into a sequence-chunked scan so the
+full (B, S, V) logits tensor never materializes — with V up to 262k
+(gemma3) and 1M train tokens, unchunked logits would be ~1 TB in fp32."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.layers.norms import softcap
+
+
+def _vocab_weight(cfg: ModelConfig, params):
+    return params["embed"]["tok"].T if cfg.tie_embeddings else params["head"]
+
+
+def chunked_xent(cfg: ModelConfig, params, h, labels, *,
+                 chunk: int = 512):
+    """Mean next-token cross-entropy. h (B,S,d), labels (B,S) (already
+    shifted by the caller). Scans over S in ``chunk`` slices."""
+    B, S, d = h.shape
+    w = _vocab_weight(cfg, params)
+    c = min(chunk, S)
+    if S % c:
+        c = S  # fall back to single chunk for ragged small seqs
+    n_chunks = S // c
+
+    @jax.checkpoint
+    def body(acc, i):
+        # rematted: without this, backward stores every chunk's logits
+        # (B, c, V) — tens of GB at 262k vocab
+        hc = jax.lax.dynamic_slice_in_dim(h, i * c, c, axis=1)
+        lc = jax.lax.dynamic_slice_in_dim(labels, i * c, c, axis=1)
+        logits = jnp.einsum("bsd,dv->bsv", hc, w.astype(hc.dtype))
+        logits = softcap(logits, cfg.final_softcap).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)                 # (B, c)
+        gold = jnp.take_along_axis(logits, lc[..., None],
+                                   axis=-1)[..., 0]             # (B, c)
+        return acc + jnp.sum(lse - gold), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32),
+                            jnp.arange(n_chunks))
+    return total / (B * S)
+
+
+def full_xent(cfg: ModelConfig, params, h, labels):
+    """Unchunked reference (oracle for tests)."""
+    w = _vocab_weight(cfg, params)
+    logits = jnp.einsum("bsd,dv->bsv", h, w.astype(h.dtype))
+    logits = softcap(logits, cfg.final_softcap).astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - gold)

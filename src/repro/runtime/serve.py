@@ -1,0 +1,180 @@
+"""Serving runtime: prefill + decode steps with sharded KV caches, a
+continuous-batching request queue, and the BAaaS service wrapper.
+
+``make_serve_step`` builds the jit'd one-token decode step the dry-run
+lowers for decode_32k / long_500k cells.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.api import Model
+from repro.runtime.sharding import (batch_specs, cache_specs, dp_axes, named,
+                                    param_specs)
+
+
+def make_serve_step(model: Model):
+    """serve_step(params, caches, tokens, pos) -> (logits, caches)."""
+
+    def serve_step(params, caches, tokens, pos):
+        return model.decode(params, caches, tokens, pos)
+
+    return serve_step
+
+
+def make_prefill_step(model: Model, max_len: int):
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, max_len)
+    return prefill_step
+
+
+def jit_serve_step(model: Model, mesh: Mesh, batch: int, cache_len: int,
+                   params_shape, caches_shape):
+    """jit with shardings; seq-sharding kicks in for batch=1 long-context."""
+    cfg = model.cfg
+    pspecs = param_specs(cfg, params_shape, mesh)
+    dp_total = np.prod([mesh.shape[a] for a in mesh.axis_names
+                        if a in ("pod", "data")])
+    seq_shard = batch % int(dp_total) != 0
+    cspecs = cache_specs(cfg, caches_shape, mesh, batch, seq_shard=seq_shard)
+    dp = dp_axes(mesh)
+    tok_spec = P(dp, None) if batch % int(dp_total) == 0 else P(None, None)
+    pos_spec = P(dp) if batch % int(dp_total) == 0 else P(None)
+    step = make_serve_step(model)
+    jitted = jax.jit(
+        step,
+        in_shardings=(named(mesh, pspecs), named(mesh, cspecs),
+                      jax.sharding.NamedSharding(mesh, tok_spec),
+                      jax.sharding.NamedSharding(mesh, pos_spec)),
+        out_shardings=None,
+        donate_argnums=(1,))
+    return jitted, {"params": pspecs, "caches": cspecs}
+
+
+# ---------------------------------------------------------------------------
+# Continuous batching engine (BAaaS dataplane)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Request:
+    request_id: int
+    prompt: np.ndarray                 # (S,) int32
+    max_new_tokens: int = 16
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
+    done: threading.Event = dataclasses.field(default_factory=threading.Event)
+    submitted_at: float = dataclasses.field(default_factory=time.monotonic)
+    first_token_at: Optional[float] = None
+    finished_at: Optional[float] = None
+
+
+class BatchingEngine:
+    """Slot-based continuous batching: up to ``n_slots`` concurrent requests
+    share one decode program; prefill happens per-request into its slot.
+
+    Greedy decoding (argmax) — deterministic, testable.
+    """
+
+    def __init__(self, model: Model, params, n_slots: int = 4,
+                 max_len: int = 256, eos_id: Optional[int] = None):
+        # Slot recycling relies on position-masked KV caches (stale entries
+        # carry positions > current and are masked out). SSM state has no
+        # such masking, so the engine serves attention-family models; SSM
+        # serving uses jit_serve_step directly with per-batch state resets.
+        if model.cfg.ssm is not None:
+            raise ValueError("BatchingEngine supports attention-family "
+                             "models; use jit_serve_step for SSM archs")
+        self.model = model
+        self.params = params
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self._queue: "queue.Queue[Request]" = queue.Queue()
+        self._next_id = 0
+        self.caches = model.make_caches(n_slots, max_len)
+        self._slots: List[Optional[Request]] = [None] * n_slots
+        self._pos = np.zeros((n_slots,), np.int32)
+        self._decode = jax.jit(
+            lambda p, c, t, pos: model.decode(p, c, t, pos))
+        self.steps = 0
+
+    def submit(self, prompt, max_new_tokens: int = 16) -> Request:
+        req = Request(self._next_id, np.asarray(prompt, np.int32),
+                      max_new_tokens)
+        self._next_id += 1
+        self._queue.put(req)
+        return req
+
+    # ---------------- engine loop ----------------
+    def _admit(self):
+        for slot in range(self.n_slots):
+            if self._slots[slot] is not None:
+                continue
+            try:
+                req = self._queue.get_nowait()
+            except queue.Empty:
+                return
+            # prefill this slot: run prompt tokens one by one through the
+            # decode path (slot-isolated; avoids cross-slot cache rebuild)
+            self._slots[slot] = req
+            toks = req.prompt
+            for i, t in enumerate(toks[:-1]):
+                self._step_single(slot, int(t), i)
+            self._pos[slot] = len(toks) - 1
+            req._next_input = int(toks[-1])
+
+    def _step_single(self, slot: int, token: int, pos: int):
+        tokens = np.zeros((self.n_slots, 1), np.int32)
+        tokens[slot, 0] = token
+        posv = self._pos.copy()
+        posv[slot] = pos
+        logits, self.caches = self._decode(
+            self.params, self.caches, jnp.asarray(tokens),
+            jnp.asarray(posv))
+        return np.asarray(logits)
+
+    def step(self) -> int:
+        """One engine iteration: admit + one decode step for active slots.
+        Returns number of active slots."""
+        self._admit()
+        active = [i for i, r in enumerate(self._slots) if r is not None]
+        if not active:
+            return 0
+        tokens = np.zeros((self.n_slots, 1), np.int32)
+        for i in active:
+            tokens[i, 0] = self._slots[i]._next_input
+        logits, self.caches = self._decode(
+            self.params, self.caches, jnp.asarray(tokens),
+            jnp.asarray(self._pos))
+        logits = np.asarray(logits)
+        self.steps += 1
+        for i in active:
+            req = self._slots[i]
+            nxt = int(np.argmax(logits[i, 0]))
+            if req.first_token_at is None:
+                req.first_token_at = time.monotonic()
+            req.out_tokens.append(nxt)
+            req._next_input = nxt
+            self._pos[i] += 1
+            eos = self.eos_id is not None and nxt == self.eos_id
+            if len(req.out_tokens) >= req.max_new_tokens or eos \
+                    or self._pos[i] >= self.max_len - 1:
+                req.finished_at = time.monotonic()
+                req.done.set()
+                self._slots[i] = None
+                self._pos[i] = 0
+        return len(active)
+
+    def run_until_idle(self, max_steps: int = 10000):
+        for _ in range(max_steps):
+            if self.step() == 0 and self._queue.empty():
+                return

@@ -1,0 +1,8 @@
+import os
+import sys
+
+# tests run on the single real CPU device (the dry-run sets its own flags in
+# a subprocess); keep compilation deterministic and quiet
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,197 @@
+"""RC3E control-plane tests: device DB invariants (hypothesis), scheduler,
+PR cache, service models."""
+import json
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (MAX_SLOTS, BAaaSSession, ClusterSpec, DeviceDB,
+                        DeviceState, Hypervisor, JobState, NoCapacityError,
+                        RAaaSSession, RSaaSSession, SliceState)
+
+
+def make_db(nodes=2, devs=2):
+    db = DeviceDB()
+    for ni in range(nodes):
+        db.add_node(f"n{ni}")
+        for di in range(devs):
+            db.add_device(f"d{ni}-{di}", f"n{ni}")
+    return db
+
+
+# ---------------------------------------------------------------------------
+# Property: allocation never oversubscribes, release always frees
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.one_of(
+    st.tuples(st.just("alloc"), st.sampled_from([1, 2, 4])),
+    st.tuples(st.just("release"), st.integers(0, 30)),
+), min_size=1, max_size=40))
+def test_device_db_slot_invariants(ops):
+    db = make_db()
+    live = []
+    for op, arg in ops:
+        if op == "alloc":
+            try:
+                vs = db.allocate_slice("u", arg, "raas")
+                live.append(vs.slice_id)
+            except NoCapacityError:
+                # full: the DB must indeed have < arg free slots everywhere
+                assert all(d.free_slots() < arg
+                           for d in db.devices.values()
+                           if d.state != DeviceState.EXCLUSIVE)
+        else:
+            if live:
+                db.release(live.pop(arg % len(live)))
+        # invariants after every op
+        for d in db.devices.values():
+            assert 0 <= d.used_slots() <= MAX_SLOTS
+            if not d.slices:
+                assert d.state in (DeviceState.PARKED, DeviceState.DEAD,
+                                   DeviceState.EXCLUSIVE)
+
+
+def test_pack_first_placement():
+    """Energy policy: second 1-slot slice lands on the same device."""
+    db = make_db()
+    a = db.allocate_slice("u1", 1, "raas")
+    b = db.allocate_slice("u2", 1, "raas")
+    assert a.device_id == b.device_id
+    # a 4-slot tenant must go elsewhere
+    c = db.allocate_slice("u3", 4, "raas")
+    assert c.device_id != a.device_id
+
+
+def test_exclusive_excludes_vslices():
+    db = make_db(nodes=1, devs=1)
+    db.allocate_exclusive("owner")
+    with pytest.raises(NoCapacityError):
+        db.allocate_slice("other", 1, "raas")
+
+
+def test_db_json_roundtrip():
+    db = make_db()
+    db.allocate_slice("u", 2, "raas")
+    db2 = DeviceDB.from_json(db.to_json())
+    assert db2.utilization() == db.utilization()
+    assert set(db2.devices) == set(db.devices)
+
+
+def test_node_failure_orphans_and_parks():
+    db = make_db()
+    vs = db.allocate_slice("u", 2, "raas")
+    orphans = db.mark_node_dead(db.devices[vs.device_id].node_id)
+    assert [o.slice_id for o in orphans] == [vs.slice_id]
+    assert db.devices[vs.device_id].state == DeviceState.DEAD
+    # capacity still available on the surviving node
+    vs2 = db.allocate_slice("u", 2, "raas")
+    assert db.devices[vs2.device_id].node_id != db.devices[vs.device_id].node_id
+
+
+# ---------------------------------------------------------------------------
+# Scheduler
+# ---------------------------------------------------------------------------
+
+def test_scheduler_priority_and_capacity():
+    hv = Hypervisor(ClusterSpec(n_nodes=1, devices_per_node=1))
+    ran = []
+    hv.scheduler.submit("a", 4, run=lambda s: ran.append("low"), priority=20)
+    hv.scheduler.submit("b", 4, run=lambda s: ran.append("high"), priority=1)
+    hv.scheduler.run_pending()   # only one fits at a time; high goes first
+    assert ran[0] == "high"
+    hv.scheduler.run_pending()
+    assert ran == ["high", "low"]
+
+
+def test_scheduler_smaller_job_backfills():
+    hv = Hypervisor(ClusterSpec(n_nodes=1, devices_per_node=1))
+    hv.db.allocate_slice("blocker", 2, "raas")   # 2 of 4 slots gone
+    big = hv.scheduler.submit("a", 4, run=lambda s: "big")
+    small = hv.scheduler.submit("b", 2, run=lambda s: "small")
+    hv.scheduler.run_pending()
+    assert small.state == JobState.DONE        # backfilled past the big job
+    assert big.state in (JobState.QUEUED, JobState.REQUEUED)
+
+
+def test_failed_job_requeues_then_fails():
+    hv = Hypervisor(ClusterSpec())
+    def boom(slice_id):
+        raise RuntimeError("core dumped")
+    job = hv.scheduler.submit("u", 1, run=boom)
+    for _ in range(job.max_attempts):
+        hv.scheduler.run_pending()
+    assert job.state == JobState.FAILED
+    assert job.attempts == job.max_attempts
+    # slice released every time
+    assert hv.db.utilization() == {d: 0.0 for d in hv.db.devices}
+
+
+# ---------------------------------------------------------------------------
+# Reconfiguration (PR cache) + service models
+# ---------------------------------------------------------------------------
+
+def _mm_core(a, b):
+    return (a @ b,)
+
+
+def test_pr_cache_hit_is_fast():
+    import jax.numpy as jnp
+    import numpy as np
+    hv = Hypervisor(ClusterSpec())
+    ex = (jnp.ones((16, 16)), jnp.ones((16, 16)))
+    e1, t_full, hit1 = hv.reconfig.partial_reconfigure(_mm_core, ex)
+    e2, t_pr, hit2 = hv.reconfig.partial_reconfigure(_mm_core, ex)
+    assert not hit1 and hit2
+    assert e2.fingerprint == e1.fingerprint
+    assert t_pr < t_full  # paper Table I: PR ≪ full configuration
+
+
+def test_rsaas_full_device_and_run():
+    import numpy as np
+    hv = Hypervisor(ClusterSpec())
+    sess = RSaaSSession(hv, "alice")
+    assert hv.db.device(sess.device.device_id).state == DeviceState.EXCLUSIVE
+    sess.program(_mm_core, (np.eye(4, dtype=np.float32),
+                            np.ones((4, 4), np.float32)))
+    out = sess.run(np.eye(4, dtype=np.float32), np.ones((4, 4), np.float32))
+    assert np.allclose(out[0], np.ones((4, 4)))
+    sess.close()
+    assert hv.db.device(sess.device.device_id).state == DeviceState.PARKED
+
+
+def test_raas_admission_rejects_bad_core():
+    import numpy as np
+    from repro.rc2f.admission import AdmissionError
+    hv = Hypervisor(ClusterSpec())
+    sess = RAaaSSession(hv, "bob")
+
+    import jax.numpy as jnp
+
+    def bad_core(a):
+        return (a @ jnp.ones((5,)),)          # shape error -> trace failure
+
+    with pytest.raises(AdmissionError):
+        sess.deploy_core(bad_core, (np.ones((4, 4), np.float32),))
+
+    def amplifier(a):                         # 64 B in -> 16 MB out
+        return (jnp.broadcast_to(a[0, 0], (2048, 2048)) * 1.0,)
+
+    with pytest.raises(AdmissionError):
+        sess.deploy_core(amplifier, (np.ones((4, 4), np.float32),))
+    sess.close()
+
+
+def test_baaas_hides_allocation():
+    import numpy as np
+    hv = Hypervisor(ClusterSpec())
+    hv.register_service(
+        "matmul16",
+        lambda: (_mm_core, (np.ones((16, 16), np.float32),) * 2))
+    sess = BAaaSSession(hv, "carol")
+    assert sess.list_services() == ["matmul16"]
+    out = sess.invoke("matmul16", np.eye(16, dtype=np.float32),
+                      np.ones((16, 16), np.float32))
+    assert np.allclose(out[0], np.ones((16, 16)))
+    # allocation fully reclaimed afterwards
+    assert all(u == 0.0 for u in hv.db.utilization().values())

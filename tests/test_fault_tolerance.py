@@ -1,0 +1,145 @@
+"""Fault-tolerance drills: heartbeat failure -> migration/requeue,
+straggler re-placement, elastic resize, checkpoint/restart continuation."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import available_steps, latest_step, reshard, restore, save
+from repro.configs import get_config, reduced
+from repro.core import (ClusterSpec, DeviceState, ElasticController,
+                        Hypervisor, JobState, MonitorConfig, SliceState)
+from repro.data import DataConfig, DataPipeline
+from repro.models import get_model
+from repro.optim import AdamWConfig
+from repro.runtime import TrainOpts, init_train_state, make_train_step
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def test_heartbeat_failure_requeues_jobs():
+    clock = FakeClock()
+    hv = Hypervisor(ClusterSpec(n_nodes=2, devices_per_node=1),
+                    MonitorConfig(heartbeat_deadline_s=10), clock=clock)
+    job = hv.scheduler.submit("u", 4, run=None)
+    hv.scheduler.schedule_once()
+    assert job.state == JobState.RUNNING
+    dead_node = hv.db.devices[hv.db.find_slice(job.slice_id).device_id].node_id
+    # all nodes heartbeat at t=0; the job's node then goes silent
+    for n in hv.db.nodes:
+        hv.monitor.heartbeat(n)
+    clock.t = 8.0
+    for n in hv.db.nodes:
+        if n != dead_node:
+            hv.monitor.heartbeat(n)
+    clock.t = 15.0
+    orphans = hv.handle_failures()
+    assert orphans and not hv.db.nodes[dead_node].alive
+    assert job.state == JobState.REQUEUED
+    # rescheduling lands on the surviving node
+    hv.scheduler.schedule_once()
+    assert job.state == JobState.RUNNING
+    new_node = hv.db.devices[hv.db.find_slice(job.slice_id).device_id].node_id
+    assert new_node != dead_node
+
+
+def test_straggler_migration():
+    clock = FakeClock()
+    hv = Hypervisor(ClusterSpec(n_nodes=2, devices_per_node=1),
+                    MonitorConfig(straggler_factor=1.5, straggler_patience=3),
+                    clock=clock)
+    fast = hv.allocate_vslice("fast", 1)
+    slow = hv.allocate_vslice("slow", 1)
+    for _ in range(8):
+        hv.monitor.record_step(fast.slice_id, 100.0)
+        hv.monitor.record_step(slow.slice_id, 400.0)
+    moved = hv.migrate_stragglers()
+    assert len(moved) == 1
+    new = hv.db.find_slice(moved[0])
+    assert new.owner == "slow"
+    assert new.device_id != slow.device_id
+    with pytest.raises(KeyError):
+        hv.db.find_slice(slow.slice_id)   # old slice released
+
+
+def test_elastic_resize_carries_program():
+    hv = Hypervisor(ClusterSpec(n_nodes=2, devices_per_node=2))
+    ec = ElasticController(hv)
+    vs = hv.allocate_vslice("u", 1)
+    hv.db.set_slice_state(vs.slice_id, SliceState.CONFIGURED, program="abc")
+    new = ec.resize("u", 4)
+    assert len(new) == 1 and new[0].slots == 4
+    assert new[0].program == "abc"
+    assert len(hv.db.slices_of("u")) == 1
+
+
+def _train_setup(tmp_path, lr=1e-3):
+    cfg = reduced(get_config("smollm-135m")).replace(
+        dtype="float32", vocab_size=256)
+    m = get_model(cfg)
+    opts = TrainOpts(opt=AdamWConfig(lr=lr, warmup_steps=2, total_steps=50),
+                     loss_chunk=16)
+    state = init_train_state(m, jax.random.PRNGKey(0), opts)
+    step = jax.jit(make_train_step(m, opts))
+    dp = DataPipeline(DataConfig(vocab_size=256, seq_len=32, batch_size=4))
+    return m, opts, state, step, dp
+
+
+def test_checkpoint_restart_bitexact(tmp_path):
+    """Train 6 steps straight vs 3 + crash + restore + 3: identical state."""
+    d = str(tmp_path / "ckpt")
+    m, opts, state, step, dp = _train_setup(tmp_path)
+    # run A: straight through
+    sa = state
+    for i in range(6):
+        sa, _ = step(sa, dp.batch_at(i))
+    # run B: crash after 3, restore, resume (data pipeline is step-addressed)
+    sb = state
+    for i in range(3):
+        sb, _ = step(sb, dp.batch_at(i))
+    save(sb, d, step=3)
+    del sb
+    restored, at = restore(d, jax.eval_shape(lambda: state))
+    assert at == 3
+    for i in range(3, 6):
+        restored, _ = step(restored, dp.batch_at(i))
+    for a, b in zip(jax.tree.leaves(sa), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_keep_k_and_atomicity(tmp_path):
+    d = str(tmp_path / "ckpt")
+    state = {"w": jnp.arange(8.0)}
+    for s in range(5):
+        save({"w": jnp.arange(8.0) + s}, d, step=s, keep=2)
+    assert available_steps(d) == [3, 4]
+    got, s = restore(d, state)
+    assert s == 4
+    np.testing.assert_allclose(np.asarray(got["w"]), np.arange(8.0) + 4)
+
+
+def test_checkpoint_structure_mismatch_rejected(tmp_path):
+    d = str(tmp_path / "ckpt")
+    save({"w": jnp.ones(4)}, d, step=0)
+    with pytest.raises(ValueError):
+        restore(d, {"w": jnp.ones(4), "extra": jnp.ones(2)})
+
+
+def test_elastic_reshard_roundtrip():
+    """Checkpoint trained on mesh A restores onto a different layout."""
+    from jax.sharding import Mesh, PartitionSpec as P
+    devs = np.array(jax.devices()[:1]).reshape(1, 1)
+    mesh = Mesh(devs, ("data", "model"))
+    state = {"w": jnp.arange(16.0).reshape(4, 4), "b": jnp.ones(4)}
+    specs = {"w": P(None, None), "b": P(None)}
+    moved = reshard(state, mesh, specs)
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(moved)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

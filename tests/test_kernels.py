@@ -1,0 +1,150 @@
+"""Per-kernel validation: Pallas interpret mode vs pure-jnp oracle across
+shape/dtype sweeps (the container has no TPU; interpret executes the kernel
+body on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _tol(dtype):
+    return 2e-2 if dtype == jnp.bfloat16 else 2e-4
+
+
+@pytest.mark.parametrize("m,k,n", [(16, 16, 16), (32, 32, 32),
+                                   (128, 128, 128), (200, 300, 150),
+                                   (129, 257, 65)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_stream_matmul(m, k, n, dtype):
+    a = jax.random.normal(KEY, (m, k), dtype)
+    b = jax.random.normal(jax.random.PRNGKey(1), (k, n), dtype)
+    out = ops.matmul(a, b, force="interpret")
+    ref = ops.matmul(a, b, force="ref")
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=_tol(dtype) * k ** 0.5,
+                               rtol=_tol(dtype))
+
+
+def test_stream_matmul_batched_paper_sizes():
+    """The paper's workload: a stream of 16x16 / 32x32 multiplications."""
+    for size in (16, 32):
+        a = jax.random.normal(KEY, (64, size, size), jnp.float32)
+        b = jax.random.normal(jax.random.PRNGKey(2), (64, size, size),
+                              jnp.float32)
+        out = ops.matmul_batched(a, b, force="interpret")
+        ref = ops.matmul_batched(a, b, force="ref")
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("hq,hkv", [(4, 4), (4, 2), (8, 1)])
+@pytest.mark.parametrize("window", [0, 64])
+@pytest.mark.parametrize("s", [256, 512])
+def test_flash_attention(hq, hkv, window, s):
+    q = jax.random.normal(KEY, (2, hq, s, 64), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(1), (2, hkv, s, 64), jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(2), (2, hkv, s, 64), jnp.float32)
+    out = ops.flash_attention(q, k, v, window=window, force="interpret")
+    ref = ops.flash_attention(q, k, v, window=window, force="ref")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-4)
+
+
+def test_flash_attention_softcap():
+    q = jax.random.normal(KEY, (1, 2, 256, 32), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 2, 256, 32), jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(2), (1, 2, 256, 32), jnp.float32)
+    out = ops.flash_attention(q, k, v, softcap=50.0, force="interpret")
+    ref = ops.flash_attention(q, k, v, softcap=50.0, force="ref")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-4)
+
+
+@pytest.mark.parametrize("s,chunk", [(64, 16), (128, 32), (96, 32), (256, 64)])
+@pytest.mark.parametrize("n", [16, 64])
+def test_ssd_chunk_scan(s, chunk, n):
+    BH, P = 3, 16
+    x = jax.random.normal(KEY, (BH, s, P), jnp.float32) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(jax.random.PRNGKey(1), (BH, s)))
+    Bm = jax.random.normal(jax.random.PRNGKey(2), (BH, s, n)) * 0.3
+    Cm = jax.random.normal(jax.random.PRNGKey(3), (BH, s, n)) * 0.3
+    a = -jnp.exp(jax.random.normal(jax.random.PRNGKey(4), (BH,)))
+    d = jnp.ones((BH,))
+    out = ops.ssd_chunk_scan(x, dt, Bm, Cm, a, d, chunk=chunk,
+                             force="interpret")
+    ref = ops.ssd_chunk_scan(x, dt, Bm, Cm, a, d, force="ref")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=5e-4, rtol=5e-3)
+
+
+@pytest.mark.parametrize("hq,hkv,L", [(8, 2, 512), (4, 4, 1024), (16, 1, 512)])
+@pytest.mark.parametrize("window", [0, 128])
+def test_decode_attention(hq, hkv, L, window):
+    B, D = 2, 64
+    q = jax.random.normal(KEY, (B, hq, D), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, hkv, L, D), jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, hkv, L, D), jnp.float32)
+    kpos = jnp.broadcast_to(jnp.arange(L)[None], (B, L))
+    kpos = jnp.where(kpos < L - 100, kpos, -1)   # partially filled cache
+    cur = jnp.array([L - 150, L // 3])
+    out = ops.decode_attention(q, k, v, kpos, cur, window=window,
+                               force="interpret")
+    ref = ops.decode_attention(q, k, v, kpos, cur, window=window,
+                               force="ref")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-4)
+
+
+def test_ssd_kernel_matches_layer_path():
+    """The kernel oracle must agree with the model's SSD implementation."""
+    from repro.layers.ssm import ssd_scan
+    BH, s, P, n = 2, 64, 16, 16
+    x = jax.random.normal(KEY, (1, s, BH, P), jnp.float32) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(jax.random.PRNGKey(1), (1, s, BH)))
+    Bm = jax.random.normal(jax.random.PRNGKey(2), (1, s, 1, n)) * 0.3
+    Cm = jax.random.normal(jax.random.PRNGKey(3), (1, s, 1, n)) * 0.3
+    a = -jnp.exp(jax.random.normal(jax.random.PRNGKey(4), (BH,)))
+    d = jnp.ones((BH,))
+    y_layer, _ = ssd_scan(x, dt, a, Bm, Cm, d, chunk=16)
+    # kernel layout: (BH, S, P) with per-head a/d; groups pre-expanded
+    xk = jnp.moveaxis(x[0], 1, 0)                      # (BH, S, P)
+    dtk = jnp.moveaxis(dt[0], 1, 0)                    # (BH, S)
+    Bk = jnp.broadcast_to(Bm[0, :, 0][None], (BH, s, n))
+    Ck = jnp.broadcast_to(Cm[0, :, 0][None], (BH, s, n))
+    y_kernel = ops.ssd_chunk_scan(xk, dtk, Bk, Ck, a, d, chunk=16,
+                                  force="interpret")
+    np.testing.assert_allclose(
+        np.asarray(jnp.moveaxis(y_kernel, 0, 1)), np.asarray(y_layer[0]),
+        atol=5e-4, rtol=5e-3)
+
+
+def test_decode_attention_int8_cache():
+    """int8-quantized KV cache path: kernel == ref, bounded quant noise."""
+    B, Hq, Hkv, D, L = 2, 8, 2, 64, 1024
+    q = jax.random.normal(KEY, (B, Hq, D))
+    kf = jax.random.normal(jax.random.PRNGKey(5), (B, Hkv, L, D))
+    vf = jax.random.normal(jax.random.PRNGKey(6), (B, Hkv, L, D))
+
+    def quant(x):
+        amax = jnp.max(jnp.abs(x), axis=-1)
+        s = jnp.where(amax > 0, amax / 127.0, 1.0)
+        return (jnp.clip(jnp.round(x / s[..., None]), -127, 127)
+                .astype(jnp.int8), s)
+
+    k8, ks = quant(kf)
+    v8, vs = quant(vf)
+    kpos = jnp.broadcast_to(jnp.arange(L)[None], (B, L))
+    cur = jnp.array([800, 333])
+    o8 = ops.decode_attention(q, k8, v8, kpos, cur, k_scale=ks, v_scale=vs,
+                              force="interpret")
+    r8 = ops.decode_attention(q, k8, v8, kpos, cur, k_scale=ks, v_scale=vs,
+                              force="ref")
+    full = ops.decode_attention(q, kf, vf, kpos, cur, force="ref")
+    np.testing.assert_allclose(np.asarray(o8), np.asarray(r8),
+                               atol=2e-5, rtol=2e-4)
+    assert float(jnp.abs(r8 - full).max()) < 0.01   # quantization noise

@@ -1,0 +1,201 @@
+"""Per-architecture smoke tests (reduced configs) + decode consistency.
+
+Every assigned arch: instantiate the reduced same-family config, run one
+forward and one train step on CPU, assert output shapes and finiteness;
+then check the serving path (prefill + one decode token) agrees with the
+teacher-forced forward logits.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, reduced
+from repro.models import get_model
+from repro.optim import AdamWConfig
+from repro.runtime import TrainOpts, init_train_state, make_train_step
+
+B, S = 2, 32
+
+
+def _cfg(name):
+    return reduced(get_config(name)).replace(dtype="float32")
+
+
+def _batch(cfg, key, seq=S, with_labels=False):
+    toks = jax.random.randint(key, (B, seq), 0, cfg.vocab_size)
+    if cfg.family == "audio":
+        batch = {"frames": jax.random.normal(key, (B, 48, cfg.d_model)) * 0.1,
+                 "tokens": toks[:, :16]}
+        if with_labels:
+            batch["labels"] = toks[:, 1:17]
+        return batch
+    batch = {"tokens": toks}
+    if cfg.n_patches:
+        batch["patches"] = jax.random.normal(
+            key, (B, cfg.n_patches, cfg.d_model)) * 0.1
+    if with_labels:
+        batch["labels"] = jnp.roll(toks, -1, axis=1)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_shapes_finite(arch):
+    cfg = _cfg(arch)
+    m = get_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg, jax.random.PRNGKey(1))
+    h, aux = m.forward(params, batch)
+    exp_s = 16 if cfg.family == "audio" else S + cfg.n_patches
+    assert h.shape == (B, exp_s, cfg.d_model)
+    assert bool(jnp.isfinite(h).all())
+    logits = m.logits(params, h)
+    assert logits.shape == (B, exp_s, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all())
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_step_decreases_nothing_nan(arch):
+    cfg = _cfg(arch)
+    m = get_model(cfg)
+    opts = TrainOpts(opt=AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=20),
+                     loss_chunk=16)
+    state = init_train_state(m, jax.random.PRNGKey(0), opts)
+    step = jax.jit(make_train_step(m, opts))
+    batch = _batch(cfg, jax.random.PRNGKey(1), with_labels=True)
+    if cfg.family == "audio":
+        batch["labels"] = batch["tokens"]
+    losses = []
+    for i in range(3):
+        state, metrics = step(state, batch)
+        losses.append(float(metrics["loss"]))
+    assert all(jnp.isfinite(jnp.asarray(losses))), losses
+    assert losses[-1] < losses[0], losses  # same batch: must overfit
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_matches_forward(arch):
+    cfg = _cfg(arch)
+    m = get_model(cfg)
+    key = jax.random.PRNGKey(1)
+    params = m.init(key)
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    if cfg.family == "audio":
+        frames = jax.random.normal(key, (B, 48, cfg.d_model)) * 0.1
+        h, _ = m.forward(params, {"frames": frames, "tokens": toks[:, :16]})
+        full_logits = m.logits(params, h)[:, 15 - 1]
+        _, caches = m.prefill(
+            params, {"frames": frames, "tokens": toks[:, :15]}, 0)
+        d, _ = m.decode(params, caches, toks[:, 15:16],
+                        jnp.full((B,), 15, jnp.int32))
+        err = float(jnp.abs(d[:, 0] - m.logits(params, h)[:, 15]).max())
+    else:
+        batch = {"tokens": toks}
+        patches = None
+        if cfg.n_patches:
+            patches = jax.random.normal(
+                key, (B, cfg.n_patches, cfg.d_model)) * 0.1
+            batch["patches"] = patches
+        h, _ = m.forward(params, batch)
+        full_logits = m.logits(params, h)[:, -1]
+        pre = {"tokens": toks[:, :S - 1]}
+        if patches is not None:
+            pre["patches"] = patches
+        _, caches = m.prefill(params, pre, S + cfg.n_patches + 8)
+        pos = jnp.full((B,), S - 1 + cfg.n_patches, jnp.int32)
+        d, _ = m.decode(params, caches, toks[:, S - 1:S], pos)
+        err = float(jnp.abs(d[:, 0] - full_logits).max())
+    assert err < 2e-4, f"{arch}: decode/forward mismatch {err}"
+
+
+def test_multi_token_greedy_decode_consistency():
+    """Greedy decode 6 tokens == teacher-forced argmax chain (smollm)."""
+    cfg = _cfg("smollm-135m")
+    m = get_model(cfg)
+    key = jax.random.PRNGKey(3)
+    params = m.init(key)
+    prompt = jax.random.randint(key, (1, 8), 0, cfg.vocab_size)
+    _, caches = m.prefill(params, {"tokens": prompt[:, :-1]}, 32)
+    tok = prompt[:, -1:]
+    pos = jnp.array([7], jnp.int32)
+    out = []
+    for _ in range(6):
+        logits, caches = m.decode(params, caches, tok, pos)
+        tok = jnp.argmax(logits[:, 0], axis=-1)[:, None].astype(jnp.int32)
+        out.append(int(tok[0, 0]))
+        pos = pos + 1
+    # teacher-forced check: feed prompt+generated and compare argmax chain
+    full = jnp.concatenate([prompt, jnp.asarray([out], jnp.int32)], axis=1)
+    h, _ = m.forward(params, {"tokens": full})
+    logits = m.logits(params, h)
+    for i, t in enumerate(out):
+        pred = int(jnp.argmax(logits[0, 7 + i]))
+        assert pred == t, (i, pred, t)
+
+
+def test_pattern_stage_plan_structures():
+    """Stage planner: gemma3 (5L+1G)*4+2L, gemma2 pairs, zamba2 shared."""
+    from repro.models.stages import plan_stages
+    g3 = plan_stages(get_config("gemma3-1b"))
+    assert [s.kind for s in g3] == ["pattern", "run"]
+    assert g3[0].repeats == 4 and len(g3[0].sites) == 6
+    assert g3[1].repeats == 2
+    g2 = plan_stages(get_config("gemma2-9b"))
+    assert g2[0].kind == "pattern" and g2[0].repeats == 21
+    z = plan_stages(get_config("zamba2-7b"))
+    assert z[0].kind == "pattern" and z[0].repeats == 13
+    assert z[1].kind == "run" and z[1].repeats == 3
+    ds = plan_stages(get_config("deepseek-v2-lite-16b"))
+    assert ds[0].repeats == 1 and ds[1].repeats == 26
+    assert sum(s.repeats * len(s.sites) for s in ds) == 27
+
+
+from hypothesis import given, settings, strategies as st
+from repro.configs.base import (ATTN_GLOBAL, ATTN_LOCAL, MIXER_SHARED_ATTN,
+                                MIXER_SSM, ModelConfig, SSMConfig)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.sampled_from([ATTN_GLOBAL, ATTN_LOCAL, MIXER_SSM]),
+                min_size=1, max_size=4),
+       st.integers(1, 40))
+def test_stage_plan_covers_all_layers(pattern, n_layers):
+    """Property: any pattern × depth plans to exactly n_layers sites, in
+    order, with pattern tiling preserved."""
+    from repro.models.stages import plan_stages
+    cfg = ModelConfig(n_layers=n_layers, pattern=tuple(pattern),
+                      ssm=SSMConfig())
+    stages = plan_stages(cfg)
+    # reconstruct the per-layer mixer sequence from the plan
+    seq = []
+    for stg in stages:
+        for _ in range(stg.repeats):
+            seq.extend(s.mixer for s in stg.sites)
+    expected = [pattern[i % len(pattern)] for i in range(n_layers)]
+    assert seq == expected
+
+
+def test_int8_kv_cache_decode_close_to_fp():
+    """kv_quant=True: decode matches the fp cache path within quantization
+    tolerance, and the cache state is genuinely int8."""
+    cfg = _cfg("smollm-135m")
+    m = get_model(cfg)
+    key = jax.random.PRNGKey(5)
+    params = m.init(key)
+    toks = jax.random.randint(key, (B, 16), 0, cfg.vocab_size)
+
+    def run(quant):
+        c = cfg.replace(kv_quant=quant)
+        mq = get_model(c)
+        _, caches = mq.prefill(params, {"tokens": toks[:, :15]}, 32)
+        if quant:
+            leaves = jax.tree.leaves(caches)
+            assert any(l.dtype == jnp.int8 for l in leaves)
+        logits, _ = mq.decode(params, caches, toks[:, 15:16],
+                              jnp.full((B,), 15, jnp.int32))
+        return logits
+
+    lq = run(True)
+    lf = run(False)
+    # greedy tokens agree and logits are close (int8 row quantization)
+    assert jnp.array_equal(jnp.argmax(lq, -1), jnp.argmax(lf, -1))
+    assert float(jnp.abs(lq - lf).max()) < 0.15

@@ -1,0 +1,152 @@
+"""Multi-device behaviours, run in subprocesses with 8 forced host devices:
+elastic mesh shrink mid-training (checkpoint -> reshard -> continue),
+int8-compressed DP gradient exchange across real shards, SpatialShell
+sub-meshes. These prove the distribution logic with actual device counts,
+not just compile-time sharding."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def _run(code: str) -> str:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    proc = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                          text=True, env=env, cwd=ROOT, timeout=560)
+    assert proc.returncode == 0, proc.stderr[-2500:]
+    return proc.stdout
+
+
+HEADER = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+"""
+
+
+def test_elastic_shrink_mid_training():
+    """Train on 8-way DP, checkpoint, 'lose' 4 devices, reshard to 4-way DP,
+    continue — loss keeps falling and state is numerically continued."""
+    out = _run(HEADER + textwrap.dedent("""
+        from repro.configs import get_config, reduced
+        from repro.models import get_model
+        from repro.optim import AdamWConfig
+        from repro.runtime import TrainOpts, init_train_state, make_train_step
+        from repro.runtime.sharding import batch_specs, named, param_specs
+        from repro.ckpt import reshard, restore, save
+        from repro.data import DataConfig, DataPipeline
+        import tempfile
+
+        cfg = reduced(get_config("smollm-135m")).replace(dtype="float32",
+                                                         vocab_size=256)
+        model = get_model(cfg)
+        opts = TrainOpts(opt=AdamWConfig(lr=2e-3, warmup_steps=2,
+                                         total_steps=40), loss_chunk=16)
+        step = jax.jit(make_train_step(model, opts))
+        data = DataPipeline(DataConfig(vocab_size=256, seq_len=32,
+                                       batch_size=8))
+
+        def mesh_of(n):
+            return Mesh(np.array(jax.devices()[:n]).reshape(n, 1),
+                        ("data", "model"))
+
+        state = init_train_state(model, jax.random.PRNGKey(0), opts)
+        state_specs = jax.tree.map(lambda _: P(), state)
+
+        big = mesh_of(8)
+        state = jax.device_put(state, NamedSharding(big, P()))
+        losses = []
+        with big:
+            for i in range(5):
+                b = jax.device_put(
+                    data.batch_at(i),
+                    NamedSharding(big, P("data", None)))
+                state, m = step(state, b)
+                losses.append(float(m["loss"]))
+        d = tempfile.mkdtemp()
+        save(state, d, step=5)
+
+        # cluster shrinks to 4 devices: restore + reshard + continue
+        small = mesh_of(4)
+        restored, at = restore(d, jax.eval_shape(lambda: state))
+        restored = reshard(restored, small, state_specs)
+        with small:
+            for i in range(5, 10):
+                b = jax.device_put(
+                    data.batch_at(i),
+                    NamedSharding(small, P("data", None)))
+                restored, m = step(restored, b)
+                losses.append(float(m["loss"]))
+        assert losses[-1] < losses[0], losses
+        assert int(restored["step"]) == 10
+        print("OK", [round(x, 3) for x in losses])
+    """))
+    assert "OK" in out
+
+
+def test_compressed_dp_training_across_shards():
+    """shard_map DP with int8+error-feedback gradient exchange on 8 real
+    shards: loss falls, and matches uncompressed within tolerance."""
+    out = _run(HEADER + textwrap.dedent("""
+        from repro.configs import get_config, reduced
+        from repro.models import get_model
+        from repro.optim import AdamWConfig
+        from repro.runtime import TrainOpts, init_train_state
+        from repro.runtime.train import make_dp_train_step
+        from repro.data import DataConfig, DataPipeline
+
+        cfg = reduced(get_config("smollm-135m")).replace(dtype="float32",
+                                                         vocab_size=256)
+        model = get_model(cfg)
+        mesh = Mesh(np.array(jax.devices()[:8]), ("data",))
+        data = DataPipeline(DataConfig(vocab_size=256, seq_len=32,
+                                       batch_size=8))
+
+        def train(compress, steps=8):
+            opts = TrainOpts(opt=AdamWConfig(lr=2e-3, warmup_steps=2,
+                                             total_steps=40),
+                             loss_chunk=16, compress_grads=compress)
+            state = init_train_state(model, jax.random.PRNGKey(0), opts)
+            step = make_dp_train_step(model, mesh, opts)
+            losses = []
+            for i in range(steps):
+                state, m = step(state, data.batch_at(i))
+                losses.append(float(m["loss"]))
+            return losses
+
+        lc = train(True)
+        lu = train(False)
+        assert lc[-1] < lc[0], lc
+        # int8+EF tracks the uncompressed trajectory closely
+        assert abs(lc[-1] - lu[-1]) < 0.25 * lu[0], (lc[-1], lu[-1])
+        print("OK compressed", [round(x,3) for x in lc[-3:]],
+              "uncompressed", [round(x,3) for x in lu[-3:]])
+    """))
+    assert "OK" in out
+
+
+def test_spatial_shell_submeshes():
+    """SpatialShell carves a physical device set into per-slot sub-meshes
+    and runs isolated cores on each."""
+    out = _run(HEADER + textwrap.dedent("""
+        from repro.rc2f import CoreSpec, SpatialShell, StreamSpec
+
+        shell = SpatialShell(jax.devices(), n_slots=4)
+        assert len(set(d for g in shell._groups for d in g)) == 8
+        spec = CoreSpec("t", (StreamSpec((8, 8)),), (StreamSpec((8, 8)),))
+        shell.load(0, lambda a: a * 2, spec, "u0")
+        shell.load(3, lambda a: a + 1, spec, "u3")
+        mesh0 = shell.slot_mesh(0)
+        assert mesh0.devices.size == 2       # 8 devices / 4 slots
+        out0 = shell.run(0, np.ones((8, 8), np.float32))
+        out3 = shell.run(3, np.ones((8, 8), np.float32))
+        assert np.allclose(out0, 2.0) and np.allclose(out3, 2.0)
+        print("OK")
+    """))
+    assert "OK" in out

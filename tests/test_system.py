@@ -1,0 +1,138 @@
+"""End-to-end behaviour: the full RC3E story on one box — allocate via each
+service model, train a real (reduced) model through the RAaaS batch system
+with checkpointing, fail a node mid-run, restart elsewhere, and verify the
+loss trajectory continues. Plus the HLO analyzer used by the roofline."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import restore, save
+from repro.configs import get_config, reduced
+from repro.core import ClusterSpec, Hypervisor, MonitorConfig
+from repro.data import DataConfig, DataPipeline
+from repro.models import get_model
+from repro.optim import AdamWConfig
+from repro.runtime import TrainOpts, init_train_state, make_train_step
+
+
+def test_end_to_end_raas_training_with_failover(tmp_path):
+    """A tenant trains via RAaaS; its node dies; the hypervisor requeues the
+    job; training resumes from checkpoint and keeps improving."""
+    class Clock:
+        t = 0.0
+        def __call__(self):
+            return self.t
+
+    clock = Clock()
+    hv = Hypervisor(ClusterSpec(n_nodes=2, devices_per_node=1),
+                    MonitorConfig(heartbeat_deadline_s=10), clock=clock)
+    ckpt_dir = str(tmp_path / "ckpt")
+
+    cfg = reduced(get_config("smollm-135m")).replace(dtype="float32",
+                                                     vocab_size=256)
+    model = get_model(cfg)
+    opts = TrainOpts(opt=AdamWConfig(lr=2e-3, warmup_steps=2,
+                                     total_steps=40), loss_chunk=16)
+    step = jax.jit(make_train_step(model, opts))
+    data = DataPipeline(DataConfig(vocab_size=256, seq_len=32, batch_size=4))
+    losses = []
+
+    def train_job(slice_id, crash_at=None):
+        like = jax.eval_shape(
+            lambda: init_train_state(model, jax.random.PRNGKey(0), opts))
+        try:
+            state, start = restore(ckpt_dir, like)
+        except FileNotFoundError:
+            state, start = init_train_state(model, jax.random.PRNGKey(0),
+                                            opts), 0
+        for i in range(start, start + 10):
+            if crash_at is not None and i == crash_at:
+                raise RuntimeError("node lost")
+            state, m = step(state, data.batch_at(i))
+            losses.append(float(m["loss"]))
+            save(state, ckpt_dir, step=i + 1, keep=2)
+        return float(losses[-1])
+
+    job = hv.scheduler.submit("tenant", 4,
+                              run=lambda s: train_job(s, crash_at=5))
+    hv.scheduler.run_pending()            # crashes mid-run, requeued
+    assert job.state.value == "requeued"
+    assert len(losses) == 5
+
+    # the node that hosted it dies entirely; node-1 keeps heartbeating
+    for n in hv.db.nodes:
+        hv.monitor.heartbeat(n)
+    clock.t = 15.0
+    hv.monitor.heartbeat("node-1")
+    clock.t = 20.0
+    hv.handle_failures()
+    assert not hv.db.nodes["node-0"].alive
+    assert hv.db.nodes["node-1"].alive
+
+    job.run = lambda s: train_job(s)      # resume (no crash this time)
+    hv.scheduler.run_pending()
+    assert job.state.value == "done"
+    assert len(losses) == 15
+    assert losses[-1] < losses[0]
+
+
+def test_three_service_models_coexist():
+    import numpy as np
+    from repro.core import BAaaSSession, RAaaSSession, RSaaSSession
+    hv = Hypervisor(ClusterSpec(n_nodes=2, devices_per_node=2))
+    rs = RSaaSSession(hv, "alice")                    # full device
+    ra = RAaaSSession(hv, "bob", slots=2)             # vSlice
+    hv.register_service("double", lambda: (
+        lambda a: (a * 2,), (np.ones((4,), np.float32),)))
+    ba = BAaaSSession(hv, "carol")
+    out = ba.invoke("double", np.arange(4, dtype=np.float32))
+    np.testing.assert_allclose(out[0], [0, 2, 4, 6])
+    util = hv.db.utilization()
+    assert sum(v > 0 for v in util.values()) == 2     # rsaas dev + raas dev
+    rs.close(); ra.close()
+    assert all(v == 0.0 for v in hv.db.utilization().values())
+
+
+def test_hlo_analyzer_counts_loops_exactly():
+    from repro.launch.hlo_analysis import analyze_hlo
+    def f(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        y, _ = jax.lax.scan(body, x, None, length=7)
+        return y
+    x = jnp.ones((64, 64))
+    w = jnp.ones((64, 64))
+    compiled = jax.jit(f).lower(x, w).compile()
+    costs = analyze_hlo(compiled.as_text(), 1)
+    assert costs.flops == pytest.approx(7 * 2 * 64 ** 3, rel=1e-6)
+
+
+def test_hlo_analyzer_collectives():
+    from repro.launch.hlo_analysis import analyze_hlo
+    import subprocess, sys, textwrap
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, jax.numpy as jnp
+        from jax.sharding import PartitionSpec as P, NamedSharding
+        from repro.launch.hlo_analysis import analyze_hlo
+        mesh = jax.make_mesh((8,), ("d",))
+        def f(x):
+            return jax.shard_map(lambda v: jax.lax.psum(v, "d"), mesh=mesh,
+                                 in_specs=P("d"), out_specs=P())(x)
+        c = jax.jit(f).lower(jnp.ones((64, 128))).compile()
+        costs = analyze_hlo(c.as_text(), 8)
+        # ring all-reduce of an 8x128 f32 shard: 2*B*(n-1)/n
+        exp = 2 * (8 * 128 * 4) * 7 / 8
+        assert abs(costs.collective_bytes - exp) / exp < 0.5, costs.collective_bytes
+        print("OK")
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    proc = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                          text=True, env=env,
+                          cwd=os.path.join(os.path.dirname(__file__), ".."))
+    assert "OK" in proc.stdout, proc.stderr[-1500:]
