@@ -2,17 +2,23 @@
 Prints ``name,us_per_call,derived`` CSV rows."""
 from __future__ import annotations
 
+import os
 import sys
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def main() -> None:
-    sys.path.insert(0, "src")
-    from benchmarks import roofline, table1_overhead, table2_shell, table3_matmul
+    sys.path.insert(0, _ROOT)
+    sys.path.insert(0, os.path.join(_ROOT, "src"))
+    from benchmarks import (roofline, table1_overhead, table2_shell,
+                            table3_matmul, table4_multitenant)
 
     modules = [
         ("table1", table1_overhead),
         ("table2", table2_shell),
         ("table3", table3_matmul),
+        ("table4", table4_multitenant),
         ("roofline", roofline),
     ]
     print("name,us_per_call,derived")

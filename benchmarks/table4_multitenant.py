@@ -1,0 +1,102 @@
+"""Multi-tenant serving: cross-tenant continuous batching on one shared
+device vs. sequential per-tenant serving (each tenant gets the device in
+turn, RSaaS-style time sharing).
+
+The paper's multi-tenancy argument (§V): co-residency maximizes device
+utilization. For LM serving the same effect appears as decode-slot
+occupancy — each tenant alone leaves slots idle; batching ACROSS tenants
+fills them, so aggregate throughput rises with no per-request code change.
+Both paths run through the RC3E hypervisor (sessions, vSlices, audit log);
+the decode executable is compiled once and PR-swapped from the program
+cache for every session.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+N_TENANTS = 4
+REQS_PER_TENANT = 2          # a trickle per tenant: the realistic case
+PROMPT_LEN = 4
+MAX_NEW = 16
+N_SLOTS = 4
+
+
+def _setup():
+    from repro.configs import get_config, reduced
+    from repro.models import get_model
+    cfg = reduced(get_config("smollm-135m")).replace(dtype="float32")
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _prompts(cfg, seed):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size, size=PROMPT_LEN).tolist()
+            for _ in range(REQS_PER_TENANT)]
+
+
+def _serve(gw, tenant, prompts):
+    reqs = [gw.submit(tenant, p, max_new_tokens=MAX_NEW) for p in prompts]
+    return reqs
+
+
+def run():
+    from repro.core import ClusterSpec, Hypervisor
+    from repro.runtime import ServingGateway
+
+    cfg, model, params = _setup()
+    hv = Hypervisor(ClusterSpec(n_nodes=1, devices_per_node=1))
+    tenants = [f"t{i}" for i in range(N_TENANTS)]
+
+    # ---- sequential: each tenant served alone, one after another ----
+    gw = ServingGateway(hv, model, params, n_slots=N_SLOTS, max_len=64)
+    gw.open_session("warmup", slots=1)        # warm the decode executable
+    gw.submit("warmup", _prompts(cfg, 99)[0], max_new_tokens=2)
+    gw.run_until_idle()
+    gw.close_session("warmup")
+    gw.engine.steps = 0
+    t0 = time.perf_counter()
+    seq_tokens = seq_steps = 0
+    for i, t in enumerate(tenants):
+        gw.open_session(t, slots=1)
+        reqs = _serve(gw, t, _prompts(cfg, i))
+        gw.run_until_idle()
+        gw.close_session(t)
+        seq_tokens += sum(len(r.out_tokens) for r in reqs)
+    seq_s = time.perf_counter() - t0
+    seq_steps = gw.engine.steps
+
+    # ---- cross-tenant: all tenants co-resident, one batched stream ----
+    hv2 = Hypervisor(ClusterSpec(n_nodes=1, devices_per_node=1))
+    hv2.reconfig = hv.reconfig                # shared program cache (PR hit)
+    gw2 = ServingGateway(hv2, model, params, n_slots=N_SLOTS, max_len=64)
+    for t in tenants:
+        gw2.open_session(t, slots=1)
+    t1 = time.perf_counter()
+    reqs = []
+    for i, t in enumerate(tenants):
+        reqs += _serve(gw2, t, _prompts(cfg, i))
+    gw2.run_until_idle()
+    bat_s = time.perf_counter() - t1
+    bat_tokens = sum(len(r.out_tokens) for r in reqs)
+    bat_steps = gw2.engine.steps
+    gw2.close()
+
+    assert bat_tokens == seq_tokens, (bat_tokens, seq_tokens)
+    seq_tps = seq_tokens / seq_s
+    bat_tps = bat_tokens / bat_s
+    rows = [
+        ("table4.sequential_tok_s", seq_tps,
+         f"{N_TENANTS} tenants served one-by-one; {seq_steps} engine steps"),
+        ("table4.cross_tenant_tok_s", bat_tps,
+         f"co-resident tenants batched per step; {bat_steps} engine steps"),
+        ("table4.batched_speedup", bat_tps / seq_tps,
+         "paper §V: co-residency maximizes utilization"),
+    ]
+    assert bat_tps >= seq_tps, \
+        f"cross-tenant batching slower than sequential ({bat_tps:.1f} < {seq_tps:.1f} tok/s)"
+    return rows

@@ -6,6 +6,13 @@ monitor, and exposing the three cloud service models:
   RAaaS  - allocate a vSlice, plug a user core into the RC2F shell
   BAaaS  - invoke a provider-prebuilt service (model zoo), allocation hidden
 
+Serving traffic enters through the *tenant session* API
+(``open_serving_session`` / ``record_served_request`` /
+``close_serving_session``): the serving gateway in
+``repro.runtime.gateway`` binds every tenant to a hypervisor-allocated
+vSlice, and per-step telemetry flows into the straggler monitor so hot
+tenants get migrated like any other workload.
+
 On this CPU container the "physical device" is a simulated inventory; the
 dataplane executes on the host jax device. On a real cluster the same control
 plane drives per-slice jax meshes (launch/mesh.py builds them).
@@ -13,14 +20,15 @@ plane drives per-slice jax meshes (launch/mesh.py builds them).
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 from repro.core.device_db import (DeviceDB, DeviceState, NoCapacityError,
                                   SliceState, VSlice)
 from repro.core.monitor import Monitor, MonitorConfig
 from repro.core.reconfig import ProgramCache, ProgramEntry, Reconfigurator
 from repro.core.scheduler import BatchScheduler
+from repro.rc2f.admission import AdmissionController, AdmissionError
 
 
 @dataclass
@@ -32,9 +40,11 @@ class ClusterSpec:
 
 
 class Hypervisor:
-    def __init__(self, spec: ClusterSpec = ClusterSpec(),
-                 monitor_cfg: MonitorConfig = MonitorConfig(),
-                 clock: Callable[[], float] = time.monotonic):
+    def __init__(self, spec: Optional[ClusterSpec] = None,
+                 monitor_cfg: Optional[MonitorConfig] = None,
+                 clock: Callable[[], float] = time.monotonic,
+                 admission: Optional[AdmissionController] = None):
+        spec = spec if spec is not None else ClusterSpec()
         self.db = DeviceDB()
         for ni in range(spec.n_nodes):
             node = self.db.add_node(f"node-{ni}")
@@ -44,9 +54,19 @@ class Hypervisor:
                                    spec.chips_per_device)
         self.reconfig = Reconfigurator(ProgramCache())
         self.scheduler = BatchScheduler(self.db, clock)
-        self.monitor = Monitor(self.db, monitor_cfg, clock)
+        self.monitor = Monitor(self.db,
+                               monitor_cfg if monitor_cfg is not None
+                               else MonitorConfig(), clock)
+        self.admission = admission if admission is not None \
+            else AdmissionController()
         self.clock = clock
+        self.services: Dict[str, Callable[[], Any]] = {}
         self.log: List[dict] = []
+        self.last_migrations: List[Tuple[str, str]] = []
+        # called with (old_slice_id, new_slice_id) on every migration, so
+        # components holding slice handles (serving gateway) rebind at the
+        # source instead of polling
+        self.migration_listeners: List[Callable[[str, str], None]] = []
 
     # ------------------------------------------------------------------
     # Middleware entry points (paper §IV-C)
@@ -101,30 +121,76 @@ class Hypervisor:
         return out
 
     def _entry_for(self, fingerprint: str) -> ProgramEntry:
-        for e in self.reconfig.cache._entries.values():
-            if e.fingerprint == fingerprint:
-                return e
-        raise KeyError(f"program {fingerprint} evicted")
+        return self.reconfig.cache.entry_for(fingerprint)
 
     # ---------------- BAaaS ----------------
     def register_service(self, name: str, builder: Callable[[], Any]):
         """Provider-prebuilt service (bitfile + host app in the paper)."""
-        self._services = getattr(self, "_services", {})
-        self._services[name] = builder
+        self.services[name] = builder
 
     def invoke_service(self, name: str, owner: str, *args, slots: int = 1):
         """BAaaS: allocation + configuration happen invisibly."""
-        services = getattr(self, "_services", {})
-        if name not in services:
+        if name not in self.services:
             raise KeyError(f"no service {name!r}")
         vs = self.allocate_vslice(owner, slots, service_model="baas")
         try:
-            fn, example_inputs = services[name]()
+            fn, example_inputs = self.services[name]()
             self.program_slice(vs.slice_id, fn, example_inputs,
                                static_desc=name)
             return self.execute(vs.slice_id, *(args or example_inputs))
         finally:
             self.release(vs.slice_id)
+
+    # ------------------------------------------------------------------
+    # Serving gateway tenant sessions (shared-device inference traffic)
+    # ------------------------------------------------------------------
+    def open_serving_session(self, tenant: str, slots: int = 1,
+                             service_model: str = "baas") -> VSlice:
+        """Admit a tenant (quota check) and bind it to a vSlice. Every
+        serving request is attributed to this slice in ``log`` and the
+        monitor, so stragglers among serving tenants migrate exactly like
+        batch workloads."""
+        self.admission.admit_tenant(tenant, service_model, slots)
+        try:
+            vs = self.allocate_vslice(tenant, slots, service_model)
+        except Exception:   # NoCapacityError, bad slot count, ...
+            self.admission.release_tenant(tenant, service_model, slots)
+            raise
+        self._log("session_open", tenant=tenant, slice=vs.slice_id,
+                  device=vs.device_id, slots=slots,
+                  service_model=service_model)
+        return vs
+
+    def close_serving_session(self, slice_id: str):
+        vs = self.db.find_slice(slice_id)
+        tenant, model, slots = vs.owner, vs.service_model, vs.slots
+        self.release(slice_id)
+        self.admission.release_tenant(tenant or "", model or "baas", slots)
+        self._log("session_close", tenant=tenant, slice=slice_id)
+
+    def admit_serving_request(self, slice_id: str, prompt_tokens: int,
+                              new_tokens: int):
+        """Per-request admission against the session's service-model quota."""
+        vs = self.db.find_slice(slice_id)
+        self.admission.admit_request(vs.owner or "", vs.service_model or
+                                     "baas", prompt_tokens, new_tokens)
+
+    def record_serving_step(self, slice_id: str, step_ms: float):
+        """Attribute one shared decode step to a tenant's slice. Feeds the
+        same straggler policy as ``execute``."""
+        self.db.set_slice_state(slice_id, SliceState.RUNNING)
+        self.monitor.record_step(slice_id, step_ms)
+
+    def record_served_request(self, slice_id: str, tenant: str,
+                              request_id: int, prompt_tokens: int,
+                              new_tokens: int, latency_ms: float):
+        """Log a completed request against its vSlice (audit trail: every
+        served request is traceable to a hypervisor allocation)."""
+        vs = self.db.find_slice(slice_id)
+        self.admission.finish_request(tenant, vs.service_model or "baas")
+        self._log("serve", tenant=tenant, slice=slice_id,
+                  request=request_id, prompt_tokens=prompt_tokens,
+                  new_tokens=new_tokens, latency_ms=round(latency_ms, 3))
 
     # ------------------------------------------------------------------
     # Failure handling / elasticity
@@ -141,8 +207,11 @@ class Hypervisor:
 
     def migrate_stragglers(self) -> List[str]:
         """Re-place slices flagged by the straggler policy (paper's load
-        distribution role). Returns new slice ids."""
+        distribution role). Returns new slice ids; ``last_migrations`` holds
+        the (old, new) pairs so callers holding slice handles (e.g. the
+        serving gateway) can rebind."""
         moved = []
+        self.last_migrations = []
         for sid in self.monitor.find_stragglers():
             try:
                 vs = self.db.find_slice(sid)
@@ -164,8 +233,11 @@ class Hypervisor:
             self.db.release(sid)
             self.monitor.clear_slice(sid)
             moved.append(new.slice_id)
+            self.last_migrations.append((sid, new.slice_id))
             self._log("migrate", old=sid, new=new.slice_id,
                       old_device=old_dev, new_device=new.device_id)
+            for listener in self.migration_listeners:
+                listener(sid, new.slice_id)
         return moved
 
     # ------------------------------------------------------------------

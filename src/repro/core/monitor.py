@@ -28,10 +28,10 @@ class MonitorConfig:
 
 
 class Monitor:
-    def __init__(self, db: DeviceDB, cfg: MonitorConfig = MonitorConfig(),
+    def __init__(self, db: DeviceDB, cfg: Optional[MonitorConfig] = None,
                  clock: Callable[[], float] = time.monotonic):
         self.db = db
-        self.cfg = cfg
+        self.cfg = cfg if cfg is not None else MonitorConfig()
         self.clock = clock
         self._step_times: Dict[str, List[float]] = {}
         self._straggler_strikes: Dict[str, int] = {}

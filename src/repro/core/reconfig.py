@@ -49,13 +49,25 @@ class ProgramEntry:
 
 
 class ProgramCache:
-    """Executable cache ≈ the provider's pre-built bitfile store (BAaaS)."""
+    """Executable cache ≈ the provider's pre-built bitfile store (BAaaS).
 
-    def __init__(self):
+    Doubly indexed: by full key (fingerprint, input avals) for PR swaps, and
+    by fingerprint alone for the hypervisor's execute path. Optionally
+    bounded: ``max_entries`` evicts least-recently-used programs, the
+    analogue of a finite on-device bitfile library.
+    """
+
+    def __init__(self, max_entries: Optional[int] = None):
+        from collections import OrderedDict
         self._lock = threading.Lock()
-        self._entries: Dict[Tuple[str, str], ProgramEntry] = {}
+        self._entries: "OrderedDict[Tuple[str, str], ProgramEntry]" = \
+            OrderedDict()
+        self._by_fp: Dict[str, ProgramEntry] = {}
+        self._fp_key: Dict[str, Tuple[str, str]] = {}
+        self.max_entries = max_entries
         self.hits = 0
         self.misses = 0
+        self.evictions = 0
 
     def key(self, fp: str, example_inputs) -> Tuple[str, str]:
         return (fp, _aval_key(example_inputs))
@@ -65,6 +77,7 @@ class ProgramCache:
             e = self._entries.get(key)
             if e is not None:
                 self.hits += 1
+                self._entries.move_to_end(key)
             else:
                 self.misses += 1
             return e
@@ -72,6 +85,51 @@ class ProgramCache:
     def put(self, key, entry: ProgramEntry):
         with self._lock:
             self._entries[key] = entry
+            self._entries.move_to_end(key)
+            self._by_fp[entry.fingerprint] = entry
+            self._fp_key[entry.fingerprint] = key
+            while self.max_entries is not None \
+                    and len(self._entries) > self.max_entries:
+                _, old = self._entries.popitem(last=False)
+                self._drop_fp(old)
+                self.evictions += 1
+
+    def entry_for(self, fingerprint: str) -> ProgramEntry:
+        """O(1) lookup by program fingerprint (the 'bitfile hash'). Counts
+        as a use for the LRU bound — a program that keeps executing stays
+        resident.
+
+        Raises KeyError if the program was evicted or never configured —
+        callers holding a stale fingerprint must reconfigure.
+        """
+        with self._lock:
+            try:
+                entry = self._by_fp[fingerprint]
+            except KeyError:
+                raise KeyError(
+                    f"program {fingerprint} evicted or never configured"
+                ) from None
+            self._entries.move_to_end(self._fp_key[fingerprint])
+            return entry
+
+    def evict(self, fingerprint: str) -> None:
+        """Drop every entry for a fingerprint (bitfile withdrawn)."""
+        with self._lock:
+            for k in [k for k in self._entries if k[0] == fingerprint]:
+                old = self._entries.pop(k)
+                self._drop_fp(old)
+                self.evictions += 1
+
+    def _drop_fp(self, entry: ProgramEntry) -> None:
+        # repoint the fingerprint index at the most-recently-used surviving
+        # aval-variant, or clear it when none remains
+        for k in reversed(self._entries):
+            if k[0] == entry.fingerprint:
+                self._by_fp[entry.fingerprint] = self._entries[k]
+                self._fp_key[entry.fingerprint] = k
+                return
+        self._by_fp.pop(entry.fingerprint, None)
+        self._fp_key.pop(entry.fingerprint, None)
 
     def __len__(self):
         return len(self._entries)
@@ -81,7 +139,8 @@ class Reconfigurator:
     """Implements full configure vs partial reconfigure for vSlices."""
 
     def __init__(self, cache: Optional[ProgramCache] = None):
-        self.cache = cache or ProgramCache()
+        # NOT `cache or ...`: an empty ProgramCache is falsy via __len__
+        self.cache = cache if cache is not None else ProgramCache()
 
     def configure(self, fn: Callable, example_inputs, *,
                   static_desc: str = "", jit_kwargs: Optional[dict] = None,
@@ -103,6 +162,8 @@ class Reconfigurator:
             cost = compiled.cost_analysis() or {}
         except Exception:
             pass
+        if isinstance(cost, (list, tuple)):   # older jax returns [dict]
+            cost = cost[0] if cost else {}
         entry = ProgramEntry(
             fingerprint=fp, compiled=compiled,
             lowered_text=lowered.as_text() if keep_hlo else None,

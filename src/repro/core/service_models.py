@@ -73,7 +73,7 @@ class BAaaSSession:
         self.owner = owner
 
     def list_services(self):
-        return sorted(getattr(self.hv, "_services", {}).keys())
+        return sorted(self.hv.services.keys())
 
     def invoke(self, service: str, *args, slots: int = 1):
         return self.hv.invoke_service(service, self.owner, *args, slots=slots)

@@ -1,5 +1,7 @@
-"""Serving launcher: stands up the BAaaS service for an arch and runs a
-synthetic request workload through the continuous-batching engine.
+"""Serving launcher: stands up the multi-tenant serving gateway for an arch
+and runs a synthetic request workload from several tenants through the RC3E
+hypervisor — every request is admitted, bound to a vSlice, batched across
+tenants on the shared device, and logged by the hypervisor.
 
 Example (CPU-runnable):
   PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m --reduce \
@@ -14,9 +16,10 @@ import jax
 import numpy as np
 
 from repro.configs import get_config, reduced
-from repro.core import ClusterSpec, Hypervisor
+from repro.core import MAX_SLOTS, ClusterSpec, Hypervisor
 from repro.models import get_model
-from repro.runtime import BatchingEngine
+from repro.rc2f import AdmissionError
+from repro.runtime import ServingGateway
 
 
 def main():
@@ -24,6 +27,7 @@ def main():
     ap.add_argument("--arch", required=True)
     ap.add_argument("--reduce", action="store_true")
     ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--tenants", type=int, default=3)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=12)
     ap.add_argument("--max-len", type=int, default=128)
@@ -36,25 +40,58 @@ def main():
     model = get_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
 
-    hv = Hypervisor(ClusterSpec(n_nodes=1, devices_per_node=1))
-    vs = hv.allocate_vslice(f"svc:{cfg.name}", slots=2, service_model="baas")
-    engine = BatchingEngine(model, params, n_slots=args.slots,
-                            max_len=args.max_len)
-    print(f"{cfg.name} service on {vs.slice_id}, {args.slots} slots")
+    # size the simulated inventory to the tenant count: first tenant gets a
+    # 2-slot vSlice, the rest 1 slot each
+    total_slots = args.tenants + 1
+    n_devices = max(1, -(-total_slots // MAX_SLOTS))
+    hv = Hypervisor(ClusterSpec(n_nodes=1, devices_per_node=n_devices))
+    gw = ServingGateway(hv, model, params, n_slots=args.slots,
+                        max_len=args.max_len)
+    tenants = [f"tenant-{i}" for i in range(args.tenants)]
+    for i, t in enumerate(tenants):
+        sess = gw.open_session(t, slots=2 if i == 0 else 1)
+        print(f"{t}: session on {sess.slice_id} ({sess.slots} slot(s))")
+    print(f"{cfg.name} gateway up, {args.slots} decode slots, "
+          f"{len(tenants)} tenants share {n_devices} device(s)")
+
+    def submit_throttled(tenant, prompt):
+        """Back-pressure instead of failing when a tenant hits its
+        in-flight quota: drive the engine until the backlog drains."""
+        while True:
+            try:
+                return gw.submit(tenant, prompt,
+                                 max_new_tokens=args.max_new)
+            except AdmissionError:
+                if gw.step() == 0:
+                    raise       # nothing draining: structurally rejected
 
     rng = np.random.default_rng(0)
     t0 = time.monotonic()
-    reqs = [engine.submit(rng.integers(0, cfg.vocab_size,
-                                       size=rng.integers(2, 9)).tolist(),
-                          max_new_tokens=args.max_new)
-            for _ in range(args.requests)]
-    engine.run_until_idle()
+    reqs = [submit_throttled(tenants[i % len(tenants)],
+                             rng.integers(0, cfg.vocab_size,
+                                          size=rng.integers(2, 9)).tolist())
+            for i in range(args.requests)]
+    gw.run_until_idle()
     wall = time.monotonic() - t0
+
     total = sum(len(r.out_tokens) for r in reqs)
     lat = [(r.finished_at - r.submitted_at) for r in reqs]
-    print(f"{len(reqs)} requests, {total} tokens, {wall:.2f}s wall "
-          f"({total/wall:.1f} tok/s), median latency {np.median(lat)*1e3:.0f} ms")
-    hv.release(vs.slice_id)
+    print(f"\n{len(reqs)} requests, {total} tokens, {wall:.2f}s wall "
+          f"({total/wall:.1f} tok/s), median latency "
+          f"{np.median(lat)*1e3:.0f} ms")
+    for t, s in sorted(gw.stats().items()):
+        print(f"  {t}: {s['served']} served on {s['slice']}, "
+              f"{s['tokens_out']} tokens, quota {s['quota']}")
+
+    # audit: every request must have been served through a hypervisor vSlice
+    serve_events = {e["request"]: e for e in hv.log if e["kind"] == "serve"}
+    assert len(serve_events) == len(reqs), \
+        f"{len(reqs) - len(serve_events)} requests missing from hv.log"
+    assert all(e["slice"].startswith("vs-") for e in serve_events.values())
+    print(f"\naudit: all {len(serve_events)} requests logged against "
+          f"hypervisor vSlices "
+          f"({sorted({e['slice'] for e in serve_events.values()})})")
+    gw.close()
 
 
 if __name__ == "__main__":

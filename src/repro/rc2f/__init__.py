@@ -1,5 +1,6 @@
 """RC2F: the Reconfigurable Cloud Computing Framework dataplane."""
-from repro.rc2f.admission import AdmissionError, admit_core
+from repro.rc2f.admission import (DEFAULT_QUOTAS, AdmissionController,
+                                  AdmissionError, ServiceQuota, admit_core)
 from repro.rc2f.control import ConfigSpace, make_gcs, make_ucs
 from repro.rc2f.core_api import CoreSpec, StreamSpec, compile_core
 from repro.rc2f.fifo import (PCIE_LINK_BYTES_S, TPU_HOST_LINK_BYTES_S,

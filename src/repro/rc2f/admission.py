@@ -1,10 +1,21 @@
-"""Admission checks for RAaaS user cores — the paper's planned "sanity
-checking for (partial) bitfiles" (§VI), realized as abstract evaluation:
-the core must trace successfully against its declared stream shapes, touch
-no out-of-contract state, and produce finite-sized outputs."""
+"""Admission control for the RC2F shell — the paper's planned "sanity
+checking for (partial) bitfiles" (§VI) plus per-service-model quotas.
+
+Two layers:
+
+* ``admit_core`` — structural checks on a user core, realized as abstract
+  evaluation: the core must trace successfully against its declared stream
+  shapes, touch no out-of-contract state, and produce finite-sized outputs.
+* ``AdmissionController`` — capacity/quota policy per service model
+  (RSaaS / RAaaS / BAaaS): how many slots one tenant may hold, how many
+  requests it may keep in flight, and how large a request may be. The
+  hypervisor owns one controller; the serving gateway consults it before
+  any tenant traffic reaches a device.
+"""
 from __future__ import annotations
 
-from typing import Callable
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Optional
 
 import jax
 
@@ -44,3 +55,119 @@ def _nbytes(aval) -> int:
     import numpy as np
     return int(np.prod(aval.shape)) * aval.dtype.itemsize if aval.shape else \
         aval.dtype.itemsize
+
+
+# ---------------------------------------------------------------------------
+# Per-service-model quotas (paper §III: the three models expose different
+# amounts of the device, so they get different ceilings)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ServiceQuota:
+    max_slots_per_tenant: int = 4        # vSlice slots one tenant may hold
+    max_inflight_requests: int = 32      # concurrent serving requests
+    max_prompt_tokens: int = 4096
+    max_new_tokens: int = 1024
+
+
+DEFAULT_QUOTAS: Dict[str, ServiceQuota] = {
+    # RSaaS tenants own whole devices; request limits are irrelevant there
+    "rsaas": ServiceQuota(max_slots_per_tenant=4, max_inflight_requests=256),
+    "raas": ServiceQuota(max_slots_per_tenant=2, max_inflight_requests=64),
+    # BAaaS is the shared serving pool: tight per-tenant ceilings so one
+    # tenant cannot monopolize the provider's device
+    "baas": ServiceQuota(max_slots_per_tenant=2, max_inflight_requests=16,
+                         max_prompt_tokens=2048, max_new_tokens=512),
+}
+
+
+@dataclass
+class _TenantUsage:
+    slots: int = 0
+    inflight: int = 0
+    admitted: int = 0
+    rejected: int = 0
+
+
+class AdmissionController:
+    """Quota bookkeeping per (tenant, service model): what a tenant holds
+    under RAaaS does not count against its BAaaS ceiling and vice versa.
+
+    Raises ``AdmissionError`` when a tenant would exceed its ceiling; the
+    caller (hypervisor / gateway) never allocates on a rejected request.
+    """
+
+    def __init__(self, quotas: Optional[Dict[str, ServiceQuota]] = None):
+        self.quotas = dict(DEFAULT_QUOTAS)
+        if quotas:
+            self.quotas.update(quotas)
+        self._usage: Dict[tuple, _TenantUsage] = {}
+
+    def quota_for(self, service_model: str) -> ServiceQuota:
+        try:
+            return self.quotas[service_model]
+        except KeyError:
+            raise AdmissionError(f"unknown service model {service_model!r}") \
+                from None
+
+    def _u(self, tenant: str, service_model: str) -> _TenantUsage:
+        return self._usage.setdefault((tenant, service_model),
+                                      _TenantUsage())
+
+    # ---------------- tenant (slot) admission ----------------
+    def admit_tenant(self, tenant: str, service_model: str, slots: int):
+        q = self.quota_for(service_model)
+        u = self._u(tenant, service_model)
+        if u.slots + slots > q.max_slots_per_tenant:
+            u.rejected += 1
+            raise AdmissionError(
+                f"tenant {tenant!r} would hold {u.slots + slots} slots, "
+                f"{service_model} quota is {q.max_slots_per_tenant}")
+        u.slots += slots
+
+    def release_tenant(self, tenant: str, service_model: str, slots: int):
+        u = self._u(tenant, service_model)
+        u.slots = max(0, u.slots - slots)
+
+    # ---------------- request admission ----------------
+    def admit_request(self, tenant: str, service_model: str,
+                      prompt_tokens: int, new_tokens: int):
+        q = self.quota_for(service_model)
+        u = self._u(tenant, service_model)
+        if u.inflight >= q.max_inflight_requests:
+            u.rejected += 1
+            raise AdmissionError(
+                f"tenant {tenant!r} has {u.inflight} requests in flight "
+                f"(quota {q.max_inflight_requests})")
+        if prompt_tokens > q.max_prompt_tokens:
+            u.rejected += 1
+            raise AdmissionError(
+                f"prompt of {prompt_tokens} tokens exceeds "
+                f"{service_model} limit {q.max_prompt_tokens}")
+        if new_tokens > q.max_new_tokens:
+            u.rejected += 1
+            raise AdmissionError(
+                f"{new_tokens} new tokens exceeds {service_model} "
+                f"limit {q.max_new_tokens}")
+        u.inflight += 1
+        u.admitted += 1
+
+    def finish_request(self, tenant: str, service_model: str):
+        u = self._u(tenant, service_model)
+        u.inflight = max(0, u.inflight - 1)
+
+    # ---------------- introspection ----------------
+    def usage(self, tenant: str,
+              service_model: Optional[str] = None) -> dict:
+        """Usage counters for one service model, or summed across all of a
+        tenant's models when ``service_model`` is None. Read-only: never
+        creates usage records for unknown tenants."""
+        if service_model is not None:
+            us = [self._usage.get((tenant, service_model),
+                                  _TenantUsage())]
+        else:
+            us = [u for (t, _), u in self._usage.items() if t == tenant]
+        return {"slots": sum(u.slots for u in us),
+                "inflight": sum(u.inflight for u in us),
+                "admitted": sum(u.admitted for u in us),
+                "rejected": sum(u.rejected for u in us)}

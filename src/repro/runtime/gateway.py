@@ -1,0 +1,214 @@
+"""Multi-tenant serving gateway: the hypervisor as the single entry point
+for inference traffic (paper §IV + RC2F §III shared-shell multi-tenancy).
+
+Before this layer existed, the continuous-batching engine ran *beside* the
+RC3E control plane — requests never touched vSlice allocation, admission or
+the straggler monitor. The gateway closes that gap:
+
+  * every tenant opens a *session*: quota-checked by the RC2F admission
+    controller, bound to a hypervisor-allocated vSlice, and its decode
+    program is PR-swapped onto that slice from the program cache;
+  * every request is admitted against the tenant's service-model quota and
+    dynamically batched ACROSS tenants on the shared device (the engine's
+    tenant-tagged queues + slice-aware slot shares);
+  * every decode step is attributed to the active tenants' slices,
+    share-weighted, so a tenant hogging the device shows up as a straggler
+    and gets migrated by the existing ``Hypervisor.migrate_stragglers``;
+  * every completed request is logged against its vSlice in
+    ``Hypervisor.log`` — the audit trail the paper's middleware keeps.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hypervisor import Hypervisor
+from repro.models.api import Model
+from repro.rc2f.admission import AdmissionError
+from repro.runtime.serve import BatchingEngine, Request, make_serve_step
+
+
+@dataclasses.dataclass
+class TenantSession:
+    """A tenant's binding to the shared serving device."""
+    tenant: str
+    slice_id: str
+    slots: int                      # vSlice size -> engine slot share
+    service_model: str = "baas"
+    submitted: int = 0
+    served: int = 0
+    tokens_out: int = 0
+
+
+class ServingGateway:
+    """Routes all serving traffic for one model through the hypervisor.
+
+    One gateway owns one BatchingEngine (one shared device in the paper's
+    terms); tenants co-reside on it exactly like vFPGAs on a physical FPGA.
+    """
+
+    def __init__(self, hv: Hypervisor, model: Model, params,
+                 n_slots: int = 4, max_len: int = 256,
+                 eos_id: Optional[int] = None, migrate_every: int = 0):
+        self.hv = hv
+        self.model = model
+        self.engine = BatchingEngine(model, params, n_slots=n_slots,
+                                     max_len=max_len, eos_id=eos_id)
+        self.engine.on_step = self._on_step
+        self.engine.on_finish = self._on_finish
+        self.migrate_every = migrate_every   # steps between straggler sweeps
+        self._sessions: Dict[str, TenantSession] = {}
+        self.migrations: List[Tuple[str, str]] = []
+        # rebind at the source: ANY migrate_stragglers() call (ours or an
+        # external ops sweep) immediately repoints affected sessions
+        hv.migration_listeners.append(self._on_migration)
+
+        # Compile the decode step THROUGH the hypervisor's reconfigurator:
+        # the executable lands in the RC3E program cache (full configuration
+        # once), and each tenant session PR-swaps it onto its own vSlice.
+        self._decode_fn = make_serve_step(model)
+        # avals only: pinning the real params/cache arrays here would keep
+        # a duplicate KV-cache set alive for the gateway's lifetime
+        self._example = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(jnp.shape(x), x.dtype),
+            (params, self.engine.caches,
+             jnp.zeros((n_slots, 1), jnp.int32),
+             jnp.zeros((n_slots,), jnp.int32)))
+        self._desc = f"serve:{model.cfg.name}:slots{n_slots}:len{max_len}"
+        entry, dt, hit = hv.reconfig.partial_reconfigure(
+            self._decode_fn, self._example, static_desc=self._desc)
+        self.engine.use_program(entry.compiled)
+        self.program_fingerprint = entry.fingerprint
+        hv._log("gateway_up", model=model.cfg.name, n_slots=n_slots,
+                fingerprint=entry.fingerprint, compile_s=dt, cache_hit=hit)
+
+    # ------------------------------------------------------------------
+    # Tenant sessions
+    # ------------------------------------------------------------------
+    def open_session(self, tenant: str, slots: int = 1,
+                     service_model: str = "baas") -> TenantSession:
+        if tenant in self._sessions:
+            raise ValueError(f"tenant {tenant!r} already has a session")
+        vs = self.hv.open_serving_session(tenant, slots, service_model)
+        # bind the shared decode program to this tenant's slice (PR swap —
+        # a cache hit, microseconds; slice goes ALLOCATED -> CONFIGURED)
+        self.hv.program_slice(vs.slice_id, self._decode_fn, self._example,
+                              static_desc=self._desc)
+        # slice-aware scheduling: a k-slot vSlice may hold k engine slots
+        self.engine.set_tenant_share(tenant, slots)
+        sess = TenantSession(tenant, vs.slice_id, slots, service_model)
+        self._sessions[tenant] = sess
+        return sess
+
+    def close_session(self, tenant: str):
+        sess = self._sessions.pop(tenant)
+        # drop queued requests and settle ALL outstanding in-flight quota
+        # now (requests still decoding finish as orphans — see _on_finish)
+        self.engine.cancel_queued(tenant)
+        for _ in range(max(0, sess.submitted - sess.served)):
+            self.hv.admission.finish_request(tenant, sess.service_model)
+        self.engine.set_tenant_share(tenant, None)
+        self.hv.close_serving_session(sess.slice_id)
+
+    def close(self):
+        for tenant in list(self._sessions):
+            self.close_session(tenant)
+        try:
+            self.hv.migration_listeners.remove(self._on_migration)
+        except ValueError:
+            pass    # already deregistered (close called twice)
+
+    def session(self, tenant: str) -> TenantSession:
+        return self._sessions[tenant]
+
+    # ------------------------------------------------------------------
+    # Request path
+    # ------------------------------------------------------------------
+    def submit(self, tenant: str, prompt, max_new_tokens: int = 16) -> Request:
+        try:
+            sess = self._sessions[tenant]
+        except KeyError:
+            raise KeyError(f"tenant {tenant!r} has no serving session "
+                           "(call open_session first)") from None
+        if len(prompt) + max_new_tokens > self.engine.max_len:
+            raise AdmissionError(
+                f"request needs {len(prompt) + max_new_tokens} cache "
+                f"positions, engine max_len is {self.engine.max_len}")
+        self.hv.admit_serving_request(sess.slice_id, len(prompt),
+                                      max_new_tokens)
+        sess.submitted += 1
+        req = self.engine.submit(prompt, max_new_tokens, tenant=tenant)
+        # stamp the session identity: if the session is closed and reopened
+        # while this request still decodes, the orphan must not be
+        # attributed (or quota-settled) against the new session
+        req._session = sess
+        return req
+
+    def step(self) -> int:
+        """One shared decode step across all tenants; periodically sweeps
+        for straggling (hot) tenants and rebinds migrated sessions."""
+        n = self.engine.step()
+        if self.migrate_every and self.engine.steps \
+                and self.engine.steps % self.migrate_every == 0:
+            self.rebalance()
+        return n
+
+    def run_until_idle(self, max_steps: int = 10000):
+        for _ in range(max_steps):
+            if self.step() == 0 and self.engine.idle():
+                return
+
+    # ------------------------------------------------------------------
+    # Telemetry -> control plane
+    # ------------------------------------------------------------------
+    def _on_step(self, active_by_tenant: Dict[str, int], step_ms: float):
+        total = sum(active_by_tenant.values()) or 1
+        for tenant, n in active_by_tenant.items():
+            sess = self._sessions.get(tenant)
+            if sess is None:
+                continue
+            # per-entitled-slot attribution: tenants using exactly their
+            # share record equal times (no churn from mere size
+            # differences); a slice on a slow/overloaded device records
+            # consistently higher and is what the straggler policy catches
+            self.hv.record_serving_step(
+                sess.slice_id, step_ms * n / (total * sess.slots))
+
+    def _on_finish(self, req: Request):
+        sess = self._sessions.get(req.tenant)
+        if sess is None or sess is not getattr(req, "_session", None):
+            # the submitting session closed while this request was still
+            # decoding (possibly a new session reopened under the same
+            # tenant name); its quota was already settled by close_session
+            return
+        sess.served += 1
+        sess.tokens_out += len(req.out_tokens)
+        latency_ms = ((req.finished_at or time.monotonic())
+                      - req.submitted_at) * 1e3
+        self.hv.record_served_request(sess.slice_id, req.tenant,
+                                      req.request_id, len(req.prompt),
+                                      len(req.out_tokens), latency_ms)
+
+    def _on_migration(self, old: str, new: str):
+        for sess in self._sessions.values():
+            if sess.slice_id == old:
+                sess.slice_id = new
+                self.migrations.append((old, new))
+
+    def rebalance(self) -> List[Tuple[str, str]]:
+        """Run the hypervisor's straggler sweep; migrated sessions are
+        rebound by the migration listener."""
+        self.hv.migrate_stragglers()
+        return self.hv.last_migrations
+
+    # ------------------------------------------------------------------
+    def stats(self) -> dict:
+        return {t: {"slice": s.slice_id, "slots": s.slots,
+                    "submitted": s.submitted, "served": s.served,
+                    "tokens_out": s.tokens_out,
+                    "quota": self.hv.admission.usage(t)}
+                for t, s in self._sessions.items()}

@@ -70,6 +70,7 @@ class Request:
     request_id: int
     prompt: np.ndarray                 # (S,) int32
     max_new_tokens: int = 16
+    tenant: str = "default"
     out_tokens: List[int] = dataclasses.field(default_factory=list)
     done: threading.Event = dataclasses.field(default_factory=threading.Event)
     submitted_at: float = dataclasses.field(default_factory=time.monotonic)
@@ -80,6 +81,12 @@ class Request:
 class BatchingEngine:
     """Slot-based continuous batching: up to ``n_slots`` concurrent requests
     share one decode program; prefill happens per-request into its slot.
+
+    Requests are tenant-tagged: each tenant has its own FIFO queue, and
+    admission round-robins across tenants so one tenant's backlog cannot
+    starve the others. A tenant's *share* (max concurrent slots, set from
+    its vSlice size by the serving gateway) caps how many engine slots it
+    may occupy at once — slice-aware scheduling on a shared device.
 
     Greedy decoding (argmax) — deterministic, testable.
     """
@@ -98,7 +105,9 @@ class BatchingEngine:
         self.n_slots = n_slots
         self.max_len = max_len
         self.eos_id = eos_id
-        self._queue: "queue.Queue[Request]" = queue.Queue()
+        self._queues: "Dict[str, queue.Queue[Request]]" = {}
+        self._tenant_share: Dict[str, int] = {}      # max concurrent slots
+        self._rr_offset = 0                          # round-robin cursor
         self._next_id = 0
         self.caches = model.make_caches(n_slots, max_len)
         self._slots: List[Optional[Request]] = [None] * n_slots
@@ -106,22 +115,87 @@ class BatchingEngine:
         self._decode = jax.jit(
             lambda p, c, t, pos: model.decode(p, c, t, pos))
         self.steps = 0
+        # hooks for the serving gateway: called after every decode step /
+        # on every request completion
+        self.on_step: Optional[Callable[[Dict[str, int], float], None]] = None
+        self.on_finish: Optional[Callable[[Request], None]] = None
 
-    def submit(self, prompt, max_new_tokens: int = 16) -> Request:
+    def use_program(self, compiled: Callable) -> None:
+        """Swap in an externally compiled decode executable — the serving
+        gateway routes compilation through the hypervisor's Reconfigurator
+        so the decode program lives in the RC3E program cache (and PR swaps
+        bind it to each tenant's vSlice)."""
+        self._decode = compiled
+
+    def set_tenant_share(self, tenant: str, max_slots: Optional[int]) -> None:
+        """Cap a tenant's concurrent engine slots (None removes the cap)."""
+        if max_slots is None:
+            self._tenant_share.pop(tenant, None)
+        else:
+            self._tenant_share[tenant] = max(1, int(max_slots))
+
+    def submit(self, prompt, max_new_tokens: int = 16,
+               tenant: str = "default") -> Request:
         req = Request(self._next_id, np.asarray(prompt, np.int32),
-                      max_new_tokens)
+                      max_new_tokens, tenant=tenant)
         self._next_id += 1
-        self._queue.put(req)
+        self._queues.setdefault(tenant, queue.Queue()).put(req)
         return req
+
+    # ---------------- tenant bookkeeping ----------------
+    def cancel_queued(self, tenant: str) -> List[Request]:
+        """Drop a tenant's not-yet-admitted requests (e.g. its serving
+        session closed). Returns the cancelled requests, marked done."""
+        q = self._queues.pop(tenant, None)
+        dropped: List[Request] = []
+        while q is not None:
+            try:
+                dropped.append(q.get_nowait())
+            except queue.Empty:
+                break
+        for r in dropped:
+            r.finished_at = time.monotonic()
+            r.done.set()
+        return dropped
+
+    def active_by_tenant(self) -> Dict[str, int]:
+        counts: Dict[str, int] = {}
+        for r in self._slots:
+            if r is not None:
+                counts[r.tenant] = counts.get(r.tenant, 0) + 1
+        return counts
+
+    def queued_by_tenant(self) -> Dict[str, int]:
+        return {t: q.qsize() for t, q in self._queues.items()}
+
+    def _pop_next_request(self) -> Optional[Request]:
+        """Round-robin over tenants: next queued request from a tenant with
+        spare share, starting after the last admitted tenant."""
+        tenants = list(self._queues.keys())
+        if not tenants:
+            return None
+        active = self.active_by_tenant()
+        n = len(tenants)
+        for k in range(n):
+            t = tenants[(self._rr_offset + k) % n]
+            share = self._tenant_share.get(t, self.n_slots)
+            if active.get(t, 0) >= share:
+                continue
+            try:
+                req = self._queues[t].get_nowait()
+            except queue.Empty:
+                continue
+            self._rr_offset = (self._rr_offset + k + 1) % n
+            return req
+        return None
 
     # ---------------- engine loop ----------------
     def _admit(self):
         for slot in range(self.n_slots):
             if self._slots[slot] is not None:
                 continue
-            try:
-                req = self._queue.get_nowait()
-            except queue.Empty:
+            req = self._pop_next_request()
+            if req is None:
                 return
             # prefill this slot: run prompt tokens one by one through the
             # decode path (slot-isolated; avoids cross-slot cache rebuild)
@@ -152,11 +226,15 @@ class BatchingEngine:
         tokens = np.zeros((self.n_slots, 1), np.int32)
         for i in active:
             tokens[i, 0] = self._slots[i]._next_input
+        t0 = time.monotonic()
         logits, self.caches = self._decode(
             self.params, self.caches, jnp.asarray(tokens),
             jnp.asarray(self._pos))
         logits = np.asarray(logits)
+        step_ms = (time.monotonic() - t0) * 1e3
         self.steps += 1
+        if self.on_step is not None:
+            self.on_step(self.active_by_tenant(), step_ms)
         for i in active:
             req = self._slots[i]
             nxt = int(np.argmax(logits[i, 0]))
@@ -172,9 +250,16 @@ class BatchingEngine:
                 req.done.set()
                 self._slots[i] = None
                 self._pos[i] = 0
+                if self.on_finish is not None:
+                    self.on_finish(req)
         return len(active)
+
+    def idle(self) -> bool:
+        return all(r is None for r in self._slots) and \
+            all(q.empty() for q in self._queues.values())
 
     def run_until_idle(self, max_steps: int = 10000):
         for _ in range(max_steps):
-            if self.step() == 0 and self._queue.empty():
+            if self.step() == 0 and \
+                    all(q.empty() for q in self._queues.values()):
                 return

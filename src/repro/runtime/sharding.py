@@ -24,6 +24,22 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.configs.base import ModelConfig
 
 
+def shard_map(f, mesh: Mesh, in_specs, out_specs, check: bool = False):
+    """``jax.shard_map`` across jax versions: older releases only ship
+    ``jax.experimental.shard_map`` and spell the check flag ``check_rep``
+    instead of ``check_vma``."""
+    if hasattr(jax, "shard_map"):
+        try:
+            return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_vma=check)
+        except TypeError:
+            return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_rep=check)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check)
+
+
 def dp_axes(mesh: Mesh):
     axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
     return axes if len(axes) > 1 else (axes[0] if axes else None)

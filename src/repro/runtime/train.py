@@ -24,7 +24,8 @@ from repro.models.api import Model
 from repro.optim.adamw import AdamWConfig, adamw_update, init_opt_state
 from repro.optim.compress import compressed_psum, init_residuals
 from repro.runtime.losses import chunked_xent
-from repro.runtime.sharding import batch_specs, dp_axes, named, param_specs
+from repro.runtime.sharding import (batch_specs, dp_axes, named, param_specs,
+                                    shard_map)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -52,7 +53,8 @@ def make_loss_fn(model: Model, opts: TrainOpts):
     return loss_fn
 
 
-def init_train_state(model: Model, key, opts: TrainOpts = TrainOpts()):
+def init_train_state(model: Model, key, opts: Optional[TrainOpts] = None):
+    opts = opts if opts is not None else TrainOpts()
     params = model.init(key)
     state = {"params": params, "opt_state": init_opt_state(params),
              "step": jnp.zeros((), jnp.int32)}
@@ -67,7 +69,7 @@ def _split_micro(batch, n: int):
         lambda x: x.reshape((n, x.shape[0] // n) + x.shape[1:]), batch)
 
 
-def make_train_step(model: Model, opts: TrainOpts = TrainOpts(),
+def make_train_step(model: Model, opts: Optional[TrainOpts] = None,
                     grad_specs=None):
     """GSPMD train step: state/batch shardings supplied at jit time.
 
@@ -76,6 +78,7 @@ def make_train_step(model: Model, opts: TrainOpts = TrainOpts(),
     update — forces the DP reduce-scatter to happen in bf16 on the grads
     instead of materializing fp32 full-weight transients in the update.
     """
+    opts = opts if opts is not None else TrainOpts()
     loss_fn = make_loss_fn(model, opts)
     grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
 
@@ -145,9 +148,10 @@ def jit_train_step(model: Model, mesh: Mesh, opts: TrainOpts,
 # ---------------------------------------------------------------------------
 
 def make_dp_train_step(model: Model, mesh: Mesh,
-                       opts: TrainOpts = TrainOpts()):
+                       opts: Optional[TrainOpts] = None):
     """shard_map data-parallel step: grads all-reduced explicitly, optionally
     int8-compressed with error feedback. Params replicated across DP."""
+    opts = opts if opts is not None else TrainOpts()
     loss_fn = make_loss_fn(model, opts)
     grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
     axis = "data"
@@ -177,10 +181,9 @@ def make_dp_train_step(model: Model, mesh: Mesh,
         batch_sp = jax.tree.map(lambda _: P(axis), batch)
         metric_specs = {k: rep for k in
                         ("loss", "xent", "aux", "grad_norm", "lr")}
-        return jax.shard_map(
-            shard_step, mesh=mesh,
+        return shard_map(
+            shard_step, mesh,
             in_specs=(state_specs, batch_sp),
-            out_specs=(state_specs, metric_specs),
-            check_vma=False)(state, batch)
+            out_specs=(state_specs, metric_specs))(state, batch)
 
     return jax.jit(step)

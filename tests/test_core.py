@@ -182,6 +182,85 @@ def test_raas_admission_rejects_bad_core():
     sess.close()
 
 
+def test_program_cache_fingerprint_lookup():
+    """entry_for is the public O(1) fingerprint index the hypervisor's
+    execute path uses (no scan over private state)."""
+    import numpy as np
+    from repro.core import ProgramCache, Reconfigurator
+    rc = Reconfigurator(ProgramCache())
+    ex = (np.ones((4, 4), np.float32),) * 2
+    entry, _ = rc.configure(_mm_core, ex)
+    assert rc.cache.entry_for(entry.fingerprint) is entry
+    with pytest.raises(KeyError):
+        rc.cache.entry_for("deadbeef00000000")
+
+
+def test_evicted_program_raises_on_execute():
+    """A slice whose program was evicted from the cache must fail loudly:
+    the hypervisor raises KeyError instead of silently recompiling."""
+    import numpy as np
+    hv = Hypervisor(ClusterSpec())
+    vs = hv.allocate_vslice("u", 1)
+    ex = (np.ones((4, 4), np.float32),) * 2
+    entry = hv.program_slice(vs.slice_id, _mm_core, ex)
+    hv.reconfig.cache.evict(entry.fingerprint)
+    with pytest.raises(KeyError, match="evicted"):
+        hv.execute(vs.slice_id, *ex)
+
+
+def test_entry_for_counts_as_lru_use():
+    """A program that keeps executing (entry_for lookups) must stay
+    resident in a bounded cache; colder entries evict first."""
+    from repro.core import ProgramCache, ProgramEntry
+    pc = ProgramCache(max_entries=2)
+    pc.put(("hot", "a"), ProgramEntry("hot", "exe-hot", None, 0.0))
+    pc.put(("cold", "a"), ProgramEntry("cold", "exe-cold", None, 0.0))
+    pc.entry_for("hot")                       # the execute path
+    pc.put(("new", "a"), ProgramEntry("new", "exe-new", None, 0.0))
+    assert pc.entry_for("hot").compiled == "exe-hot"
+    with pytest.raises(KeyError):
+        pc.entry_for("cold")                  # cold one was evicted
+
+
+def test_cache_fp_index_repoints_on_variant_eviction():
+    """Evicting one aval-variant of a fingerprint must repoint the public
+    index at a surviving variant, never at the evicted executable."""
+    from repro.core import ProgramCache, ProgramEntry
+    pc = ProgramCache(max_entries=2)
+    a = ProgramEntry("fp1", "exe-a", None, 0.0)
+    b = ProgramEntry("fp1", "exe-b", None, 0.0)
+    pc.put(("fp1", "avalA"), a)
+    pc.put(("fp1", "avalB"), b)      # index points at b (latest)
+    pc.get(("fp1", "avalA"))         # a becomes most-recently-used
+    pc.put(("fp2", "avalC"), ProgramEntry("fp2", "exe-c", None, 0.0))
+    # LRU evicted (fp1, avalB); the index must fall back to the live a
+    assert pc.entry_for("fp1") is a
+
+
+def test_program_cache_lru_bound():
+    """max_entries bounds the bitfile library; LRU entries are evicted and
+    their fingerprints drop out of the public index."""
+    from repro.core import ProgramCache, Reconfigurator
+    import numpy as np
+
+    def make_core(i):
+        def core(a):
+            return (a * float(i),)
+        core.__name__ = f"core_{i}"
+        return core
+
+    rc = Reconfigurator(ProgramCache(max_entries=2))
+    ex = (np.ones((2, 2), np.float32),)
+    entries = [rc.configure(make_core(i), ex, static_desc=str(i))[0]
+               for i in range(3)]
+    assert len(rc.cache) == 2
+    assert rc.cache.evictions == 1
+    with pytest.raises(KeyError):
+        rc.cache.entry_for(entries[0].fingerprint)   # oldest evicted
+    for e in entries[1:]:
+        assert rc.cache.entry_for(e.fingerprint) is e
+
+
 def test_baaas_hides_allocation():
     import numpy as np
     hv = Hypervisor(ClusterSpec())

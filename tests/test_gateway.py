@@ -1,0 +1,306 @@
+"""Serving gateway tests: tenant sessions through the hypervisor, quota
+admission, slice-aware slot shares, straggler telemetry/migration, and the
+program-cache binding of the decode executable."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core import ClusterSpec, Hypervisor, SliceState
+from repro.models import get_model
+from repro.rc2f import AdmissionController, AdmissionError, ServiceQuota
+from repro.runtime import BatchingEngine, ServingGateway
+
+
+@pytest.fixture(scope="module")
+def served_model():
+    cfg = reduced(get_config("smollm-135m")).replace(dtype="float32")
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _prompt(cfg, n=4, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, cfg.vocab_size, size=n).tolist()
+
+
+# ---------------------------------------------------------------------------
+# Request path: everything routed through the hypervisor
+# ---------------------------------------------------------------------------
+
+def test_every_request_bound_to_a_vslice(served_model):
+    cfg, model, params = served_model
+    hv = Hypervisor(ClusterSpec(n_nodes=1, devices_per_node=1))
+    gw = ServingGateway(hv, model, params, n_slots=4, max_len=64)
+    a = gw.open_session("alice", slots=2)
+    b = gw.open_session("bob", slots=1)
+
+    reqs = [gw.submit("alice" if i % 2 == 0 else "bob",
+                      _prompt(cfg, seed=i), max_new_tokens=5)
+            for i in range(6)]
+    gw.run_until_idle()
+
+    assert all(len(r.out_tokens) == 5 for r in reqs)
+    serve = [e for e in hv.log if e["kind"] == "serve"]
+    assert len(serve) == 6
+    by_tenant = {e["request"]: e for e in serve}
+    for r in reqs:
+        e = by_tenant[r.request_id]
+        assert e["tenant"] == r.tenant
+        assert e["slice"] == (a if r.tenant == "alice" else b).slice_id
+        assert e["new_tokens"] == 5
+    # per-tenant step telemetry reached the monitor
+    assert hv.monitor.median_step_ms() is not None
+    assert set(hv.monitor._step_times) == {a.slice_id, b.slice_id}
+    # slices went through the lifecycle: CONFIGURED on program, RUNNING on steps
+    assert hv.db.find_slice(a.slice_id).state == SliceState.RUNNING
+    gw.close()
+    assert all(u == 0.0 for u in hv.db.utilization().values())
+    assert hv.admission.usage("alice")["slots"] == 0
+
+
+def test_decode_program_shared_via_program_cache(served_model):
+    """The decode executable is compiled once (full configuration) and every
+    session/gateway after that is a PR cache hit."""
+    cfg, model, params = served_model
+    hv = Hypervisor(ClusterSpec(n_nodes=1, devices_per_node=1))
+    gw = ServingGateway(hv, model, params, n_slots=2, max_len=64)
+    gw.open_session("a", slots=1)
+    gw.open_session("b", slots=1)
+    programs = [e for e in hv.log if e["kind"] == "program"]
+    assert len(programs) == 2 and all(p["cache_hit"] for p in programs)
+    assert {p["fingerprint"] for p in programs} == {gw.program_fingerprint}
+    # same hypervisor, second gateway: construction is also a cache hit
+    gw2 = ServingGateway(hv, model, params, n_slots=2, max_len=64)
+    up = [e for e in hv.log if e["kind"] == "gateway_up"]
+    assert not up[0]["cache_hit"] and up[1]["cache_hit"]
+    gw.close()
+
+
+# ---------------------------------------------------------------------------
+# Admission quotas
+# ---------------------------------------------------------------------------
+
+def test_session_quota_rejected_without_allocation(served_model):
+    cfg, model, params = served_model
+    hv = Hypervisor(ClusterSpec(n_nodes=1, devices_per_node=1))
+    gw = ServingGateway(hv, model, params, n_slots=2, max_len=64)
+    with pytest.raises(AdmissionError):
+        gw.open_session("greedy", slots=4)      # baas quota: 2 slots
+    assert all(u == 0.0 for u in hv.db.utilization().values())
+    assert hv.admission.usage("greedy")["rejected"] == 1
+    # a conforming session still fits afterwards
+    gw.open_session("greedy", slots=2)
+    gw.close()
+
+
+def test_request_quotas_per_service_model(served_model):
+    cfg, model, params = served_model
+    adm = AdmissionController({"baas": ServiceQuota(
+        max_slots_per_tenant=2, max_inflight_requests=2,
+        max_prompt_tokens=8, max_new_tokens=4)})
+    hv = Hypervisor(ClusterSpec(n_nodes=1, devices_per_node=1),
+                    admission=adm)
+    gw = ServingGateway(hv, model, params, n_slots=2, max_len=64)
+    gw.open_session("t", slots=1)
+    gw.submit("t", _prompt(cfg), max_new_tokens=4)
+    gw.submit("t", _prompt(cfg), max_new_tokens=4)
+    with pytest.raises(AdmissionError):        # in-flight ceiling
+        gw.submit("t", _prompt(cfg), max_new_tokens=4)
+    gw.run_until_idle()                        # drains -> inflight freed
+    with pytest.raises(AdmissionError):        # prompt too long
+        gw.submit("t", _prompt(cfg, n=9), max_new_tokens=4)
+    with pytest.raises(AdmissionError):        # too many new tokens
+        gw.submit("t", _prompt(cfg), max_new_tokens=5)
+    gw.submit("t", _prompt(cfg), max_new_tokens=4)   # back under quota
+    gw.run_until_idle()
+    assert gw.session("t").served == 3
+    gw.close()
+
+
+def test_close_with_outstanding_requests_returns_quota(served_model):
+    """Closing a session mid-backlog must not leak in-flight quota: queued
+    requests are cancelled, decoding ones settle on completion."""
+    cfg, model, params = served_model
+    hv = Hypervisor(ClusterSpec(n_nodes=1, devices_per_node=1))
+    gw = ServingGateway(hv, model, params, n_slots=2, max_len=64)
+    gw.open_session("t", slots=1)
+    reqs = [gw.submit("t", _prompt(cfg, seed=i), max_new_tokens=4)
+            for i in range(4)]
+    gw.step()                                  # one request starts decoding
+    gw.close_session("t")                      # 3 still queued -> cancelled
+    gw.run_until_idle()                        # in-flight one drains
+    assert hv.admission.usage("t")["inflight"] == 0
+    assert sum(r.done.is_set() for r in reqs) == 4
+    # a fresh session still has full quota
+    gw.open_session("t", slots=1)
+    gw.submit("t", _prompt(cfg), max_new_tokens=4)
+    gw.run_until_idle()
+    gw.close()
+
+
+def test_reopened_session_not_charged_for_orphan_requests(served_model):
+    """A request still decoding when its session closes must not be
+    attributed (or quota-settled) against a reopened session of the same
+    tenant name."""
+    cfg, model, params = served_model
+    hv = Hypervisor(ClusterSpec(n_nodes=1, devices_per_node=1))
+    gw = ServingGateway(hv, model, params, n_slots=2, max_len=64)
+    gw.open_session("t", slots=1)
+    gw.submit("t", _prompt(cfg), max_new_tokens=6)
+    gw.step()                                   # request enters a slot
+    gw.close_session("t")                       # settles its quota
+    new_sess = gw.open_session("t", slots=1)
+    gw.run_until_idle()                         # orphan finishes now
+    assert new_sess.served == 0 and new_sess.tokens_out == 0
+    assert hv.admission.usage("t")["inflight"] == 0
+    # the orphan must not appear in the audit log bound to the new slice
+    assert not any(e["kind"] == "serve" and e["slice"] == new_sess.slice_id
+                   for e in hv.log)
+    # the new session still works normally
+    gw.submit("t", _prompt(cfg, seed=7), max_new_tokens=3)
+    gw.run_until_idle()
+    assert new_sess.served == 1
+    gw.close()
+
+
+def test_request_exceeding_engine_max_len_rejected(served_model):
+    """A request that cannot fit the KV cache is rejected at admission
+    instead of silently corrupting a slot."""
+    cfg, model, params = served_model
+    hv = Hypervisor(ClusterSpec(n_nodes=1, devices_per_node=1))
+    gw = ServingGateway(hv, model, params, n_slots=2, max_len=32)
+    gw.open_session("t", slots=1)
+    with pytest.raises(AdmissionError, match="max_len"):
+        gw.submit("t", _prompt(cfg, n=30), max_new_tokens=8)
+    assert hv.admission.usage("t")["inflight"] == 0
+    gw.close()
+
+
+def test_external_migration_rebinds_session(served_model):
+    """migrate_stragglers called OUTSIDE the gateway (ops sweep) still
+    rebinds the serving session via the migration listener."""
+    cfg, model, params = served_model
+    hv = Hypervisor(ClusterSpec(n_nodes=2, devices_per_node=1))
+    gw = ServingGateway(hv, model, params, n_slots=2, max_len=64)
+    hot = gw.open_session("hot", slots=1)
+    cold = gw.open_session("cold", slots=1)
+    old = hot.slice_id
+    for _ in range(8):
+        hv.monitor.record_step(hot.slice_id, 400.0)
+        hv.monitor.record_step(cold.slice_id, 100.0)
+    hv.migrate_stragglers()                    # not gw.rebalance()
+    assert hot.slice_id != old
+    # serving continues against the new slice without KeyError
+    gw.submit("hot", _prompt(cfg), max_new_tokens=3)
+    gw.run_until_idle()
+    assert gw.session("hot").served == 1
+    gw.close()
+
+
+def test_quota_usage_isolated_per_service_model():
+    """Slots held under one service model must not count against another
+    model's ceiling for the same tenant."""
+    adm = AdmissionController()
+    adm.admit_tenant("t", "raas", 2)           # raas quota is 2: at ceiling
+    adm.admit_tenant("t", "baas", 2)           # independent baas ceiling
+    with pytest.raises(AdmissionError):
+        adm.admit_tenant("t", "baas", 1)
+    adm.release_tenant("t", "raas", 2)
+    assert adm.usage("t", "raas")["slots"] == 0
+    assert adm.usage("t", "baas")["slots"] == 2
+    assert adm.usage("t")["slots"] == 2        # aggregate view
+
+
+def test_bad_slot_count_does_not_leak_quota(served_model):
+    """If allocation fails for any reason (here: invalid slot count), the
+    quota admitted beforehand must be returned."""
+    cfg, model, params = served_model
+    hv = Hypervisor(ClusterSpec(n_nodes=1, devices_per_node=1))
+    with pytest.raises(ValueError):
+        hv.open_serving_session("t", slots=3, service_model="rsaas")
+    assert hv.admission.usage("t")["slots"] == 0
+    hv.open_serving_session("t", slots=2, service_model="rsaas")
+
+
+def test_gateway_close_deregisters_migration_listener(served_model):
+    cfg, model, params = served_model
+    hv = Hypervisor(ClusterSpec(n_nodes=1, devices_per_node=1))
+    gw = ServingGateway(hv, model, params, n_slots=2, max_len=64)
+    assert gw._on_migration in hv.migration_listeners
+    gw.close()
+    gw.close()                                  # idempotent
+    assert gw._on_migration not in hv.migration_listeners
+
+
+def test_submit_without_session_rejected(served_model):
+    cfg, model, params = served_model
+    hv = Hypervisor(ClusterSpec(n_nodes=1, devices_per_node=1))
+    gw = ServingGateway(hv, model, params, n_slots=2, max_len=64)
+    with pytest.raises(KeyError):
+        gw.submit("nobody", _prompt(cfg))
+
+
+# ---------------------------------------------------------------------------
+# Slice-aware scheduling in the engine
+# ---------------------------------------------------------------------------
+
+def test_tenant_share_caps_concurrent_slots(served_model):
+    """A 1-slot tenant may never occupy more than one engine slot, even
+    with a deep backlog and free capacity."""
+    cfg, model, params = served_model
+    hv = Hypervisor(ClusterSpec(n_nodes=1, devices_per_node=1))
+    gw = ServingGateway(hv, model, params, n_slots=4, max_len=64)
+    gw.open_session("small", slots=1)
+    for i in range(4):
+        gw.submit("small", _prompt(cfg, seed=i), max_new_tokens=3)
+    while gw.step():
+        assert gw.engine.active_by_tenant().get("small", 0) <= 1
+    assert gw.session("small").served == 4
+    gw.close()
+
+
+def test_round_robin_admission_across_tenants(served_model):
+    """With two backlogged tenants and two slots, admission interleaves
+    tenants instead of draining one queue first."""
+    cfg, model, params = served_model
+    engine = BatchingEngine(model, params, n_slots=2, max_len=64)
+    for i in range(2):
+        engine.submit(_prompt(cfg, seed=i), max_new_tokens=3, tenant="a")
+    for i in range(2):
+        engine.submit(_prompt(cfg, seed=10 + i), max_new_tokens=3,
+                      tenant="b")
+    engine.step()
+    assert engine.active_by_tenant() == {"a": 1, "b": 1}
+    engine.run_until_idle()
+    assert engine.queued_by_tenant() == {"a": 0, "b": 0}
+
+
+# ---------------------------------------------------------------------------
+# Straggler telemetry -> migration -> session rebind
+# ---------------------------------------------------------------------------
+
+def test_hot_tenant_migrates_and_session_rebinds(served_model):
+    cfg, model, params = served_model
+    hv = Hypervisor(ClusterSpec(n_nodes=2, devices_per_node=1))
+    gw = ServingGateway(hv, model, params, n_slots=4, max_len=64)
+    hot = gw.open_session("hot", slots=1)
+    cold = gw.open_session("cold", slots=1)
+    old_slice, old_dev = hot.slice_id, hv.db.find_slice(hot.slice_id).device_id
+
+    # simulate telemetry: the hot tenant consistently dominates step time
+    for _ in range(8):
+        gw._on_step({"hot": 1}, 400.0)
+        gw._on_step({"cold": 1}, 100.0)
+    moved = gw.rebalance()
+    assert moved and moved[0][0] == old_slice
+    assert hot.slice_id != old_slice
+    new_vs = hv.db.find_slice(hot.slice_id)
+    assert new_vs.device_id != old_dev
+    assert new_vs.owner == "hot"
+    assert new_vs.program == gw.program_fingerprint   # program carried over
+    # telemetry after the move lands on the new slice
+    gw._on_step({"hot": 1}, 50.0)
+    assert hot.slice_id in hv.monitor._step_times
+    gw.close()

@@ -106,12 +106,12 @@ def test_error_feedback_preserves_mean_signal():
     total_t = jnp.zeros(128)
 
     def one_step(grads, res):
-        return jax.shard_map(
+        from repro.runtime.sharding import shard_map
+        return shard_map(
             lambda gg, rr: compressed_psum(gg, rr, "data"),
-            mesh=mesh,
+            mesh,
             in_specs=(jax.tree.map(lambda _: jax.sharding.PartitionSpec(), g),) * 2,
-            out_specs=(jax.tree.map(lambda _: jax.sharding.PartitionSpec(), g),) * 2,
-            check_vma=False)(grads, res)
+            out_specs=(jax.tree.map(lambda _: jax.sharding.PartitionSpec(), g),) * 2)(grads, res)
 
     for i in range(30):
         gi = {"w": jax.random.normal(jax.random.PRNGKey(i), (128,))}

@@ -1,0 +1,90 @@
+"""BatchScheduler policy tests: strict priority ordering, FIFO tiebreak
+within a priority class, and max_attempts exhaustion on repeated failure."""
+import pytest
+
+from repro.core import (BatchScheduler, ClusterSpec, DeviceDB, Hypervisor,
+                        JobState)
+
+
+def make_db(nodes=1, devs=4):
+    db = DeviceDB()
+    for ni in range(nodes):
+        db.add_node(f"n{ni}")
+        for di in range(devs):
+            db.add_device(f"d{ni}-{di}", f"n{ni}")
+    return db
+
+
+def test_priority_ordering():
+    """Lower priority value runs first regardless of submission order."""
+    sched = BatchScheduler(make_db())
+    ran = []
+    sched.submit("u", 1, run=lambda s: ran.append("p20"), priority=20)
+    sched.submit("u", 1, run=lambda s: ran.append("p1"), priority=1)
+    sched.submit("u", 1, run=lambda s: ran.append("p10"), priority=10)
+    started = sched.schedule_once()
+    assert [j.priority for j in started] == [1, 10, 20]
+
+
+def test_fifo_tiebreak_within_priority():
+    """Same priority: jobs start in submission order."""
+    sched = BatchScheduler(make_db())
+    jobs = [sched.submit("u", 1, priority=5) for _ in range(4)]
+    started = sched.schedule_once()
+    assert [j.job_id for j in started] == [j.job_id for j in jobs]
+
+
+def test_fifo_tiebreak_survives_requeue():
+    """A requeued job re-enters the FIFO at requeue time with its original
+    priority, so it still beats later submissions of the same priority."""
+    sched = BatchScheduler(make_db(devs=1))   # 4 slots total
+    first = sched.submit("u", 4, run=lambda s: (_ for _ in ()).throw(
+        RuntimeError("boom")), priority=5)
+    sched.run_pending()                       # fails -> requeued
+    assert first.state == JobState.REQUEUED
+    second = sched.submit("u", 4, run=lambda s: "ok", priority=5)
+    started = sched.schedule_once()           # capacity for one at a time
+    assert [j.job_id for j in started] == [first.job_id]
+
+
+def test_max_attempts_exhaustion():
+    sched = BatchScheduler(make_db())
+    calls = []
+
+    def boom(slice_id):
+        calls.append(slice_id)
+        raise RuntimeError("core dumped")
+
+    job = sched.submit("u", 1, run=boom)
+    job.max_attempts = 2
+    for _ in range(5):                        # extra passes must be no-ops
+        sched.run_pending()
+    assert job.state == JobState.FAILED
+    assert job.attempts == 2
+    assert len(calls) == 2
+    assert job.error == "core dumped"
+    # every attempt's slice was released
+    assert all(d.used_slots() == 0 for d in sched.db.devices.values())
+
+
+def test_failed_terminal_job_not_rescheduled():
+    sched = BatchScheduler(make_db())
+    job = sched.submit("u", 1, run=lambda s: 1 / 0)
+    job.max_attempts = 1
+    sched.run_pending()
+    assert job.state == JobState.FAILED
+    assert sched.queued() == []
+    assert sched.schedule_once() == []
+
+
+def test_hypervisor_scheduler_integration():
+    """The hypervisor's scheduler admits by priority under real capacity."""
+    hv = Hypervisor(ClusterSpec(n_nodes=1, devices_per_node=1))
+    order = []
+    hv.scheduler.submit("a", 4, run=lambda s: order.append("low"),
+                        priority=30)
+    hv.scheduler.submit("b", 4, run=lambda s: order.append("high"),
+                        priority=2)
+    hv.scheduler.run_pending()
+    hv.scheduler.run_pending()
+    assert order == ["high", "low"]

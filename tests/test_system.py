@@ -119,10 +119,11 @@ def test_hlo_analyzer_collectives():
         import jax, jax.numpy as jnp
         from jax.sharding import PartitionSpec as P, NamedSharding
         from repro.launch.hlo_analysis import analyze_hlo
+        from repro.runtime.sharding import shard_map
         mesh = jax.make_mesh((8,), ("d",))
         def f(x):
-            return jax.shard_map(lambda v: jax.lax.psum(v, "d"), mesh=mesh,
-                                 in_specs=P("d"), out_specs=P())(x)
+            return shard_map(lambda v: jax.lax.psum(v, "d"), mesh,
+                             in_specs=P("d"), out_specs=P())(x)
         c = jax.jit(f).lower(jnp.ones((64, 128))).compile()
         costs = analyze_hlo(c.as_text(), 8)
         # ring all-reduce of an 8x128 f32 shard: 2*B*(n-1)/n
