@@ -11,14 +11,15 @@ _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 def main() -> None:
     sys.path.insert(0, _ROOT)
     sys.path.insert(0, os.path.join(_ROOT, "src"))
-    from benchmarks import (roofline, table1_overhead, table2_shell,
-                            table3_matmul, table4_multitenant)
+    from benchmarks import (fleet_scaleout, roofline, table1_overhead,
+                            table2_shell, table3_matmul, table4_multitenant)
 
     modules = [
         ("table1", table1_overhead),
         ("table2", table2_shell),
         ("table3", table3_matmul),
         ("table4", table4_multitenant),
+        ("fleet", fleet_scaleout),
         ("roofline", roofline),
     ]
     print("name,us_per_call,derived")

@@ -10,6 +10,12 @@ Part 2 (serving gateway): three tenants' LM inference traffic routed through
 the RC3E hypervisor — quota-checked sessions on vSlices, requests batched
 across tenants on the shared device, every request logged against its slice.
 
+Part 3 (serving fleet): one engine per physical device; a hot tenant is
+flagged by the straggler monitor mid-stream and its session — queued AND
+in-flight requests, generated tokens included — is handed off LIVE to a
+second device's engine (the paper's outlook: "migration of user designs
+between vFPGAs and physical FPGAs").
+
 Run:  PYTHONPATH=src python examples/multi_tenant.py
 """
 import time
@@ -75,6 +81,7 @@ def main():
           np.allclose(np.asarray(after[2]), 2 * a + a))
 
     serving_gateway_demo()
+    fleet_migration_demo()
 
 
 def serving_gateway_demo():
@@ -119,6 +126,57 @@ def serving_gateway_demo():
           f"{gw.engine.steps} shared decode steps, {wall:.2f}s "
           f"(cross-tenant continuous batching)")
     gw.close()
+
+
+def fleet_migration_demo():
+    """Part 3: live migration of a serving tenant between devices."""
+    from repro.configs import get_config, reduced
+    from repro.core import ClusterSpec, Hypervisor
+    from repro.models import get_model
+    from repro.runtime import GatewayFleet
+
+    print("\n--- serving fleet: live session hand-off between devices ---")
+    cfg = reduced(get_config("smollm-135m")).replace(dtype="float32")
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    hv = Hypervisor(ClusterSpec(n_nodes=1, devices_per_node=2))
+    fleet = GatewayFleet(hv, model, params, n_slots=4, max_len=96)
+    hot = fleet.open_session("hot", slots=2)
+    cold = fleet.open_session("cold", slots=1)
+    print(f"  hot:  {hot.slice_id} on {fleet.device_of('hot')}  "
+          f"cold: {cold.slice_id} on {fleet.device_of('cold')}")
+
+    rng = np.random.default_rng(2)
+    reqs = [fleet.submit("hot", rng.integers(0, cfg.vocab_size,
+                                             size=6).tolist(),
+                         max_new_tokens=12) for _ in range(4)]
+    fleet.submit("cold", rng.integers(0, cfg.vocab_size, size=6).tolist(),
+                 max_new_tokens=12)
+    for _ in range(4):            # decoding is under way...
+        fleet.step()
+    mid = [len(r.out_tokens) for r in reqs]
+
+    # ...when the monitor flags the hot tenant as a straggler
+    for _ in range(8):
+        hv.monitor.record_step(hot.slice_id, 400.0)
+        hv.monitor.record_step(cold.slice_id, 100.0)
+    fleet.rebalance()
+    h = fleet.handoffs[-1]
+    print(f"  straggler sweep: {h['tenant']} moved "
+          f"{h['old_device']} -> {h['new_device']} with "
+          f"{h['moved_requests']} request(s) in flight "
+          f"(tokens generated so far: {mid})")
+
+    fleet.run_until_idle()
+    assert all(len(r.out_tokens) == 12 for r in reqs)
+    served = [e for e in hv.log if e["kind"] == "serve"]
+    print(f"  all {len(served)} requests completed; hot finished on "
+          f"{fleet.device_of('hot')} "
+          f"({fleet.engine_for('hot').steps} steps there)")
+    fleet.close()
+    print(f"  engines drained and parked; devices: "
+          f"{ {d.device_id: d.state.value for d in hv.db.devices.values()} }")
 
 
 if __name__ == "__main__":

@@ -127,6 +127,20 @@ class DeviceDB:
                 if d.state not in (DeviceState.DEAD, DeviceState.DRAINING)
                 and self.nodes[d.node_id].alive]
 
+    def alive_devices(self) -> List[PhysicalDevice]:
+        """Schedulable devices (not DEAD/DRAINING, node alive) — the public
+        view for policy code (elastic controller, batch scheduler)."""
+        with self._lock:
+            return self._alive_devices()
+
+    def idle_devices(self) -> List[PhysicalDevice]:
+        """PARKED, empty, alive devices (by id): wake candidates for
+        elastic scale-out and the RSaaS exclusive allocator."""
+        with self._lock:
+            return sorted((d for d in self._alive_devices()
+                           if d.state == DeviceState.PARKED and not d.slices),
+                          key=lambda d: d.device_id)
+
     def allocate_slice(self, owner: str, slots: int, service_model: str,
                        device_id: Optional[str] = None,
                        exclude_device: Optional[str] = None) -> VSlice:
@@ -161,13 +175,12 @@ class DeviceDB:
                            device_id: Optional[str] = None) -> PhysicalDevice:
         """RSaaS: whole physical device (marked separately, paper §IV-B)."""
         with self._lock:
-            cands = [d for d in self._alive_devices()
-                     if d.state == DeviceState.PARKED and not d.slices]
+            cands = self.idle_devices()
             if device_id is not None:
                 cands = [d for d in cands if d.device_id == device_id]
             if not cands:
                 raise NoCapacityError("no idle physical device")
-            dev = sorted(cands, key=lambda d: d.device_id)[0]
+            dev = cands[0]
             dev.state = DeviceState.EXCLUSIVE
             self._slice_counter += 1
             vs = VSlice(f"vs-{self._slice_counter:05d}", dev.device_id,

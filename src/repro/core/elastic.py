@@ -11,7 +11,8 @@ from __future__ import annotations
 
 from typing import List, Optional
 
-from repro.core.device_db import NoCapacityError, SliceState, VSlice
+from repro.core.device_db import (DeviceState, NoCapacityError, SliceState,
+                                  VSlice)
 from repro.core.hypervisor import Hypervisor
 
 
@@ -36,6 +37,62 @@ class ElasticController:
         self.hv._log("elastic_resize", owner=owner, slots=new_slots,
                      slice=new.slice_id)
         return [new]
+
+    # ------------------------------------------------------------------
+    # Fleet-level scaling (DeviceDB energy policy, inverted on demand)
+    # ------------------------------------------------------------------
+    def pick_scale_out_device(self) -> Optional[str]:
+        """A PARKED, alive, empty physical device to wake when serving
+        demand outgrows the active fleet — the deliberate inversion of the
+        pack-first energy policy. Returns its id, or None when every
+        device is already active (or dead)."""
+        cands = self.hv.db.idle_devices()
+        return cands[0].device_id if cands else None
+
+    def scale_out(self, slice_id: str) -> Optional[VSlice]:
+        """Wake a PARKED device and move the given (hot / deepest-queued)
+        slice onto it via a directed migration. The hypervisor's migration
+        listeners carry the dataplane along (the serving fleet spins up an
+        engine there and hands the tenant's traffic off live). Returns the
+        new slice, or None when no parked capacity exists."""
+        dev = self.pick_scale_out_device()
+        if dev is None:
+            return None
+        new = self.hv.migrate_slice(slice_id, target_device=dev,
+                                    reason="scale_out")
+        if new is not None:
+            self.hv._log("elastic_scale_out", slice=new.slice_id, device=dev)
+        return new
+
+    def consolidate(self, device_id: str) -> bool:
+        """Drain a device for parking (scale-in): migrate every slice it
+        hosts onto the remaining fleet (pack-first). Returns True when the
+        device emptied — ``DeviceDB.release`` then parks it, completing the
+        energy policy's "minimize active devices" half.
+
+        The placement is dry-run first (largest slice first against each
+        other device's free slots), so an infeasible drain returns False
+        WITHOUT migrating anything — no tenant pays a live hand-off for a
+        device that cannot actually empty.
+        """
+        dev = self.hv.db.device(device_id)
+        slices = sorted(dev.slices.values(), key=lambda s: -s.slots)
+        free = {d.device_id: d.free_slots()
+                for d in self.hv.db.alive_devices()
+                if d.device_id != device_id
+                and d.state != DeviceState.EXCLUSIVE}
+        for s in slices:
+            # mirror the allocator's pack-first order (fewest free first)
+            fits = sorted((k for k, v in free.items() if v >= s.slots),
+                          key=lambda k: (free[k], k))
+            if not fits:
+                return False
+            free[fits[0]] -= s.slots
+        for s in slices:
+            if self.hv.migrate_slice(s.slice_id, reason="scale_in") is None:
+                return False    # capacity changed under us mid-drain
+        self.hv._log("elastic_scale_in", device=device_id)
+        return True
 
     def shrink_to_survivors(self, owner: str) -> Optional[VSlice]:
         """After a node failure: re-place the tenant on surviving capacity at

@@ -27,7 +27,7 @@ from repro.core.device_db import (DeviceDB, DeviceState, NoCapacityError,
                                   SliceState, VSlice)
 from repro.core.monitor import Monitor, MonitorConfig
 from repro.core.reconfig import ProgramCache, ProgramEntry, Reconfigurator
-from repro.core.scheduler import BatchScheduler
+from repro.core.scheduler import BatchScheduler, JobState
 from repro.rc2f.admission import AdmissionController, AdmissionError
 
 
@@ -128,8 +128,15 @@ class Hypervisor:
         """Provider-prebuilt service (bitfile + host app in the paper)."""
         self.services[name] = builder
 
-    def invoke_service(self, name: str, owner: str, *args, slots: int = 1):
-        """BAaaS: allocation + configuration happen invisibly."""
+    def invoke_service(self, name: str, owner: str,
+                       args: Optional[tuple] = None, *, slots: int = 1):
+        """BAaaS: allocation + configuration happen invisibly.
+
+        ``args`` is the explicit input tuple, or None to run the service on
+        its registered example inputs. An empty tuple is respected as "call
+        with no inputs" (zero-input cores) — it must NOT fall back to the
+        example inputs the way a falsy check would.
+        """
         if name not in self.services:
             raise KeyError(f"no service {name!r}")
         vs = self.allocate_vslice(owner, slots, service_model="baas")
@@ -137,7 +144,8 @@ class Hypervisor:
             fn, example_inputs = self.services[name]()
             self.program_slice(vs.slice_id, fn, example_inputs,
                                static_desc=name)
-            return self.execute(vs.slice_id, *(args or example_inputs))
+            call_args = example_inputs if args is None else tuple(args)
+            return self.execute(vs.slice_id, *call_args)
         finally:
             self.release(vs.slice_id)
 
@@ -205,6 +213,56 @@ class Hypervisor:
             self._log("failover", orphans=ids)
         return ids
 
+    def migrate_slice(self, slice_id: str,
+                      target_device: Optional[str] = None,
+                      reason: str = "straggler") -> Optional[VSlice]:
+        """Re-place ONE slice on another device, carrying its program
+        fingerprint (PR makes re-programming cheap on the target).
+
+        Directed when ``target_device`` is given (elastic scale-out wakes a
+        PARKED device this way); otherwise the allocator packs it anywhere
+        except its current device. Fires ``migration_listeners`` with
+        (old, new) slice ids — the serving fleet's listener performs the
+        live dataplane hand-off. Returns the new slice, or None when the
+        move is impossible (unknown slice, no capacity, target == source).
+        """
+        try:
+            vs = self.db.find_slice(slice_id)
+        except KeyError:
+            return None
+        old_dev = vs.device_id
+        if target_device == old_dev:
+            return None
+        prev_state = vs.state
+        self.db.set_slice_state(slice_id, SliceState.MIGRATING)
+        try:
+            new = self.db.allocate_slice(vs.owner, vs.slots,
+                                         vs.service_model or "raas",
+                                         device_id=target_device,
+                                         exclude_device=old_dev)
+        except NoCapacityError:
+            # nowhere better to go; keep the original placement AND state
+            # (a directed move may target a never-executed slice)
+            self.db.set_slice_state(slice_id, prev_state)
+            return None
+        new.program = vs.program
+        new.state = SliceState.CONFIGURED if vs.program \
+            else SliceState.ALLOCATED
+        self.db.release(slice_id)
+        self.monitor.clear_slice(slice_id)
+        # batch jobs running on the old slice follow it, like serving
+        # sessions do via the listeners below — otherwise their eventual
+        # complete()/fail() hits a released slice and the new one leaks
+        for job in self.scheduler.jobs.values():
+            if job.slice_id == slice_id and job.state == JobState.RUNNING:
+                job.slice_id = new.slice_id
+        self._log("migrate", old=slice_id, new=new.slice_id,
+                  old_device=old_dev, new_device=new.device_id,
+                  reason=reason)
+        for listener in self.migration_listeners:
+            listener(slice_id, new.slice_id)
+        return new
+
     def migrate_stragglers(self) -> List[str]:
         """Re-place slices flagged by the straggler policy (paper's load
         distribution role). Returns new slice ids; ``last_migrations`` holds
@@ -213,31 +271,10 @@ class Hypervisor:
         moved = []
         self.last_migrations = []
         for sid in self.monitor.find_stragglers():
-            try:
-                vs = self.db.find_slice(sid)
-            except KeyError:
-                continue
-            owner, slots, model, program = (vs.owner, vs.slots,
-                                            vs.service_model, vs.program)
-            old_dev = vs.device_id
-            self.db.set_slice_state(sid, SliceState.MIGRATING)
-            try:
-                new = self.db.allocate_slice(owner, slots, model or "raas",
-                                             exclude_device=old_dev)
-            except NoCapacityError:
-                # nowhere better to go; keep the original placement
-                self.db.set_slice_state(sid, SliceState.RUNNING)
-                continue
-            new.program = program
-            new.state = SliceState.CONFIGURED if program else SliceState.ALLOCATED
-            self.db.release(sid)
-            self.monitor.clear_slice(sid)
-            moved.append(new.slice_id)
-            self.last_migrations.append((sid, new.slice_id))
-            self._log("migrate", old=sid, new=new.slice_id,
-                      old_device=old_dev, new_device=new.device_id)
-            for listener in self.migration_listeners:
-                listener(sid, new.slice_id)
+            new = self.migrate_slice(sid, reason="straggler")
+            if new is not None:
+                moved.append(new.slice_id)
+                self.last_migrations.append((sid, new.slice_id))
         return moved
 
     # ------------------------------------------------------------------

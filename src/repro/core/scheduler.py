@@ -14,7 +14,8 @@ import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional
 
-from repro.core.device_db import DeviceDB, NoCapacityError, SliceState
+from repro.core.device_db import (DeviceDB, DeviceState, NoCapacityError,
+                                  SliceState)
 
 
 class JobState(str, enum.Enum):
@@ -47,12 +48,16 @@ class Job:
     submitted_at: float = 0.0
     attempts: int = 0
     max_attempts: int = 3
+    deferrals: int = 0            # consecutive NoCapacity passes (aging)
 
 
 class BatchScheduler:
-    def __init__(self, db: DeviceDB, clock: Callable[[], float] = time.monotonic):
+    def __init__(self, db: DeviceDB,
+                 clock: Callable[[], float] = time.monotonic,
+                 starvation_patience: int = 3):
         self.db = db
         self.clock = clock
+        self.starvation_patience = starvation_patience
         self.jobs: Dict[str, Job] = {}
         self._heap: List[_QEntry] = []
         self._seq = itertools.count()        # job ids
@@ -72,7 +77,15 @@ class BatchScheduler:
     # ---------------- scheduling loop ----------------
     def schedule_once(self) -> List[Job]:
         """Admit as many queued jobs as capacity allows (priority order).
-        Returns the jobs started this pass."""
+        Returns the jobs started this pass.
+
+        Backfill with aging: a job deferred by ``NoCapacityError`` normally
+        lets smaller jobs behind it run (backfill), but after
+        ``starvation_patience`` consecutive deferred passes the pass stops
+        at it (hold-back reservation) — freed capacity then accumulates for
+        the large job instead of being nibbled away by a stream of small
+        ones behind it.
+        """
         started: List[Job] = []
         deferred: List[_QEntry] = []
         while self._heap:
@@ -85,11 +98,19 @@ class BatchScheduler:
                                             job.service_model)
             except NoCapacityError:
                 deferred.append(entry)
+                job.deferrals += 1
+                if job.deferrals >= self.starvation_patience \
+                        and self._reservation_feasible(job):
+                    self.history.append(
+                        {"t": self.clock(), "kind": "holdback",
+                         "job": job.job_id, "deferrals": job.deferrals})
+                    break
                 # keep draining the queue: a smaller job behind may still fit
                 continue
             job.slice_id = vs.slice_id
             job.state = JobState.RUNNING
             job.attempts += 1
+            job.deferrals = 0
             self.db.set_slice_state(vs.slice_id, SliceState.RUNNING)
             self.history.append({"t": self.clock(), "kind": "start",
                                  "job": job.job_id, "slice": vs.slice_id})
@@ -97,6 +118,27 @@ class BatchScheduler:
         for e in deferred:
             heapq.heappush(self._heap, e)
         return started
+
+    def _reservation_feasible(self, job: Job) -> bool:
+        """Escape hatch for the hold-back: only reserve capacity for a job
+        that completing the currently-RUNNING batch jobs could ever make
+        fit. If the blocking slots belong to allocations the scheduler
+        does not control (serving sessions, RSaaS tenants), holding the
+        queue would starve everyone behind the job forever — keep
+        backfilling instead."""
+        running_by_dev: Dict[str, int] = {}
+        for j in self.jobs.values():
+            if j.state == JobState.RUNNING and j.slice_id:
+                try:
+                    vs = self.db.find_slice(j.slice_id)
+                except KeyError:
+                    continue
+                running_by_dev[vs.device_id] = \
+                    running_by_dev.get(vs.device_id, 0) + vs.slots
+        return any(
+            d.free_slots() + running_by_dev.get(d.device_id, 0) >= job.slots
+            for d in self.db.alive_devices()
+            if d.state != DeviceState.EXCLUSIVE)
 
     def run_pending(self) -> List[Job]:
         """Admit + synchronously execute (test/CPU mode)."""

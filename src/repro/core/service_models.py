@@ -76,4 +76,8 @@ class BAaaSSession:
         return sorted(self.hv.services.keys())
 
     def invoke(self, service: str, *args, slots: int = 1):
-        return self.hv.invoke_service(service, self.owner, *args, slots=slots)
+        """Invoke with the given inputs; with none, the service runs on its
+        registered example inputs. To call a zero-input core explicitly,
+        pass ``args=()`` to ``Hypervisor.invoke_service`` directly."""
+        return self.hv.invoke_service(service, self.owner,
+                                      args if args else None, slots=slots)

@@ -1,11 +1,13 @@
-"""Serving launcher: stands up the multi-tenant serving gateway for an arch
+"""Serving launcher: stands up the multi-tenant serving FLEET for an arch
 and runs a synthetic request workload from several tenants through the RC3E
 hypervisor — every request is admitted, bound to a vSlice, batched across
-tenants on the shared device, and logged by the hypervisor.
+tenants on its vSlice's device, and logged by the hypervisor. With
+``--devices N`` the fleet runs one engine per physical device and the
+DeviceDB's placement decides where each tenant decodes.
 
 Example (CPU-runnable):
   PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m --reduce \
-      --requests 12
+      --requests 12 --devices 2
 """
 from __future__ import annotations
 
@@ -19,7 +21,7 @@ from repro.configs import get_config, reduced
 from repro.core import MAX_SLOTS, ClusterSpec, Hypervisor
 from repro.models import get_model
 from repro.rc2f import AdmissionError
-from repro.runtime import ServingGateway
+from repro.runtime import GatewayFleet
 
 
 def main():
@@ -28,6 +30,9 @@ def main():
     ap.add_argument("--reduce", action="store_true")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--tenants", type=int, default=3)
+    ap.add_argument("--devices", type=int, default=0,
+                    help="physical devices in the inventory "
+                         "(0 = size to the tenant count)")
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=12)
     ap.add_argument("--max-len", type=int, default=128)
@@ -40,38 +45,39 @@ def main():
     model = get_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
 
-    # size the simulated inventory to the tenant count: first tenant gets a
-    # 2-slot vSlice, the rest 1 slot each
+    # size the simulated inventory to the tenant count unless --devices set:
+    # first tenant gets a 2-slot vSlice, the rest 1 slot each
     total_slots = args.tenants + 1
-    n_devices = max(1, -(-total_slots // MAX_SLOTS))
+    n_devices = args.devices or max(1, -(-total_slots // MAX_SLOTS))
     hv = Hypervisor(ClusterSpec(n_nodes=1, devices_per_node=n_devices))
-    gw = ServingGateway(hv, model, params, n_slots=args.slots,
-                        max_len=args.max_len)
+    fleet = GatewayFleet(hv, model, params, n_slots=args.slots,
+                         max_len=args.max_len)
     tenants = [f"tenant-{i}" for i in range(args.tenants)]
     for i, t in enumerate(tenants):
-        sess = gw.open_session(t, slots=2 if i == 0 else 1)
-        print(f"{t}: session on {sess.slice_id} ({sess.slots} slot(s))")
-    print(f"{cfg.name} gateway up, {args.slots} decode slots, "
-          f"{len(tenants)} tenants share {n_devices} device(s)")
+        sess = fleet.open_session(t, slots=2 if i == 0 else 1)
+        print(f"{t}: session on {sess.slice_id} "
+              f"({sess.slots} slot(s), {fleet.device_of(t)})")
+    print(f"{cfg.name} fleet up: {len(fleet._engines)} engine(s) across "
+          f"{n_devices} device(s), {args.slots} decode slots each, "
+          f"{len(tenants)} tenants")
 
     def submit_throttled(tenant, prompt):
         """Back-pressure instead of failing when a tenant hits its
-        in-flight quota: drive the engine until the backlog drains."""
+        in-flight quota: drive the fleet until the backlog drains."""
         while True:
             try:
-                return gw.submit(tenant, prompt,
-                                 max_new_tokens=args.max_new)
+                return fleet.submit(tenant, prompt,
+                                    max_new_tokens=args.max_new)
             except AdmissionError:
-                if gw.step() == 0:
+                if fleet.step() == 0:
                     raise       # nothing draining: structurally rejected
-
     rng = np.random.default_rng(0)
     t0 = time.monotonic()
     reqs = [submit_throttled(tenants[i % len(tenants)],
                              rng.integers(0, cfg.vocab_size,
                                           size=rng.integers(2, 9)).tolist())
             for i in range(args.requests)]
-    gw.run_until_idle()
+    fleet.run_until_idle()
     wall = time.monotonic() - t0
 
     total = sum(len(r.out_tokens) for r in reqs)
@@ -79,9 +85,10 @@ def main():
     print(f"\n{len(reqs)} requests, {total} tokens, {wall:.2f}s wall "
           f"({total/wall:.1f} tok/s), median latency "
           f"{np.median(lat)*1e3:.0f} ms")
-    for t, s in sorted(gw.stats().items()):
-        print(f"  {t}: {s['served']} served on {s['slice']}, "
-              f"{s['tokens_out']} tokens, quota {s['quota']}")
+    for t, s in sorted(fleet.stats().items()):
+        print(f"  {t}: {s['served']} served on {s['slice']} "
+              f"({s['device']}), {s['tokens_out']} tokens, "
+              f"quota {s['quota']}")
 
     # audit: every request must have been served through a hypervisor vSlice
     serve_events = {e["request"]: e for e in hv.log if e["kind"] == "serve"}
@@ -91,7 +98,7 @@ def main():
     print(f"\naudit: all {len(serve_events)} requests logged against "
           f"hypervisor vSlices "
           f"({sorted({e['slice'] for e in serve_events.values()})})")
-    gw.close()
+    fleet.close()
 
 
 if __name__ == "__main__":

@@ -1,3 +1,4 @@
+from repro.runtime.fleet import GatewayFleet
 from repro.runtime.gateway import ServingGateway, TenantSession
 from repro.runtime.losses import chunked_xent, full_xent
 from repro.runtime.serve import (BatchingEngine, Request, jit_serve_step,

@@ -1,0 +1,334 @@
+"""Multi-device serving fleet: the hypervisor's placement decisions made
+real at the dataplane (paper §IV load-distribution role + the outlook's
+"migration of user designs between vFPGAs and physical FPGAs").
+
+``ServingGateway`` binds every tenant to a hypervisor vSlice but decodes
+everyone on ONE engine, so a migration only moved bookkeeping. The
+``GatewayFleet`` closes that gap:
+
+  * one ``BatchingEngine`` per ACTIVE physical device — the engine IS the
+    device's dataplane, its KV caches are that device's memory;
+  * ``open_session`` places a tenant on the engine backing its vSlice's
+    device, so the DeviceDB's pack-first energy policy decides where
+    decoding actually happens;
+  * ``migrate_stragglers`` (or a directed ``Hypervisor.migrate_slice``)
+    triggers a LIVE hand-off: the tenant's queued + in-flight requests are
+    drained from the source engine and resumed on the target's, with
+    already-generated tokens preserved via prompt-prefix replay; the shared
+    decode program is PR-swapped from the ``ProgramCache`` (a hit,
+    microseconds — the paper's partial-reconfiguration argument);
+  * elastic scaling wired to ``ElasticController`` and the energy policy:
+    a deep aggregate backlog wakes a PARKED device and moves the hottest
+    tenant onto it; empty idle devices drain back to PARKED.
+"""
+from __future__ import annotations
+
+import itertools
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.elastic import ElasticController
+from repro.core.hypervisor import Hypervisor
+from repro.models.api import Model
+from repro.runtime.gateway import (TenantSession, settle_finished_request,
+                                   validate_submit)
+from repro.runtime.serve import BatchingEngine, Request, make_serve_step
+
+
+class GatewayFleet:
+    """Routes serving traffic for one model across every active device.
+
+    One engine per physical device; tenants land on the engine backing
+    their vSlice and FOLLOW their vSlice when the hypervisor re-places it.
+    """
+
+    def __init__(self, hv: Hypervisor, model: Model, params,
+                 n_slots: int = 4, max_len: int = 256,
+                 eos_id: Optional[int] = None, migrate_every: int = 0,
+                 autoscale_every: int = 0, scale_up_queue_depth: int = 8):
+        # fail fast, before any session can allocate: lazy engine creation
+        # must never be the first place this surfaces (it would strand an
+        # admitted tenant and its vSlice)
+        if model.cfg.ssm is not None:
+            raise ValueError("GatewayFleet serves attention-family models; "
+                             "use jit_serve_step for SSM archs")
+        self.hv = hv
+        self.model = model
+        self.params = params
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.migrate_every = migrate_every       # steps between sweeps
+        self.autoscale_every = autoscale_every   # steps between autoscale
+        self.scale_up_queue_depth = scale_up_queue_depth
+        self.elastic = ElasticController(hv)
+        # one id stream for the whole fleet: request ids must stay unique
+        # across engines (audit log + hand-off both key on them)
+        self._req_ids = itertools.count()
+        self._engines: Dict[str, BatchingEngine] = {}    # device_id -> engine
+        self._sessions: Dict[str, TenantSession] = {}
+        self._device_of: Dict[str, str] = {}             # tenant -> device_id
+        self.migrations: List[Tuple[str, str]] = []
+        self.handoffs: List[dict] = []
+        self.steps = 0
+        self.last_round_ms: Dict[str, float] = {}        # per-device step wall
+
+        # Compile the decode step ONCE through the hypervisor's
+        # reconfigurator (full configuration); every engine spun up after
+        # that binds the same executable — a PR cache hit per device.
+        self._decode_fn = make_serve_step(model)
+        caches_avals = jax.eval_shape(lambda: model.make_caches(n_slots,
+                                                                max_len))
+        self._example = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(jnp.shape(x), x.dtype),
+            (params, caches_avals,
+             jnp.zeros((n_slots, 1), jnp.int32),
+             jnp.zeros((n_slots,), jnp.int32)))
+        self._desc = f"serve:{model.cfg.name}:slots{n_slots}:len{max_len}"
+        entry, dt, hit = hv.reconfig.partial_reconfigure(
+            self._decode_fn, self._example, static_desc=self._desc)
+        self.program_fingerprint = entry.fingerprint
+        hv._log("fleet_up", model=model.cfg.name, n_slots=n_slots,
+                fingerprint=entry.fingerprint, compile_s=dt, cache_hit=hit)
+        # register LAST: a constructor failure above must not leave a
+        # dead fleet's listener on the shared hypervisor
+        hv.migration_listeners.append(self._on_migration)
+
+    # ------------------------------------------------------------------
+    # Engine lifecycle (one per active device)
+    # ------------------------------------------------------------------
+    def _ensure_engine(self, device_id: str) -> BatchingEngine:
+        eng = self._engines.get(device_id)
+        if eng is not None:
+            return eng
+        eng = BatchingEngine(self.model, self.params, n_slots=self.n_slots,
+                             max_len=self.max_len, eos_id=self.eos_id,
+                             id_counter=self._req_ids)
+        entry, dt, hit = self.hv.reconfig.partial_reconfigure(
+            self._decode_fn, self._example, static_desc=self._desc)
+        eng.use_program(entry.compiled)
+        eng.on_step = lambda active, ms, dev=device_id: \
+            self._on_step(dev, active, ms)
+        eng.on_finish = self._on_finish
+        self._engines[device_id] = eng
+        self.hv._log("engine_up", device=device_id,
+                     fingerprint=entry.fingerprint, swap_s=dt, cache_hit=hit)
+        return eng
+
+    def park_idle_engines(self) -> List[str]:
+        """Drop engines whose device hosts no slices and whose queues/slots
+        are empty — the device itself is already PARKED (energy policy);
+        this releases its dataplane (KV caches) too."""
+        parked = []
+        for dev, eng in list(self._engines.items()):
+            if eng.idle() and not self.hv.db.device(dev).slices:
+                del self._engines[dev]
+                parked.append(dev)
+                self.hv._log("engine_park", device=dev)
+        return parked
+
+    def engine_for(self, tenant: str) -> BatchingEngine:
+        return self._engines[self._device_of[tenant]]
+
+    def device_of(self, tenant: str) -> str:
+        return self._device_of[tenant]
+
+    # ------------------------------------------------------------------
+    # Tenant sessions
+    # ------------------------------------------------------------------
+    def open_session(self, tenant: str, slots: int = 1,
+                     service_model: str = "baas") -> TenantSession:
+        if tenant in self._sessions:
+            raise ValueError(f"tenant {tenant!r} already has a session")
+        vs = self.hv.open_serving_session(tenant, slots, service_model)
+        try:
+            engine = self._ensure_engine(vs.device_id)
+            # PR-swap the shared decode program onto this tenant's slice
+            self.hv.program_slice(vs.slice_id, self._decode_fn,
+                                  self._example, static_desc=self._desc)
+            engine.set_tenant_share(tenant, slots)
+        except Exception:
+            # undo the allocation + quota: a failed open must not strand
+            # the tenant admitted against a slice it can never use
+            self.hv.close_serving_session(vs.slice_id)
+            raise
+        sess = TenantSession(tenant, vs.slice_id, slots, service_model)
+        self._sessions[tenant] = sess
+        self._device_of[tenant] = vs.device_id
+        return sess
+
+    def close_session(self, tenant: str):
+        sess = self._sessions.pop(tenant)
+        dev = self._device_of.pop(tenant)
+        engine = self._engines.get(dev)
+        if engine is not None:
+            engine.cancel_queued(tenant)
+            engine.set_tenant_share(tenant, None)
+        for _ in range(max(0, sess.submitted - sess.served)):
+            self.hv.admission.finish_request(tenant, sess.service_model)
+        self.hv.close_serving_session(sess.slice_id)
+
+    def close(self):
+        for tenant in list(self._sessions):
+            self.close_session(tenant)
+        self.park_idle_engines()
+        try:
+            self.hv.migration_listeners.remove(self._on_migration)
+        except ValueError:
+            pass    # already deregistered (close called twice)
+
+    def session(self, tenant: str) -> TenantSession:
+        return self._sessions[tenant]
+
+    # ------------------------------------------------------------------
+    # Request path
+    # ------------------------------------------------------------------
+    def submit(self, tenant: str, prompt, max_new_tokens: int = 16) -> Request:
+        try:
+            sess = self._sessions[tenant]
+        except KeyError:
+            raise KeyError(f"tenant {tenant!r} has no serving session "
+                           "(call open_session first)") from None
+        validate_submit(prompt, max_new_tokens, self.max_len)
+        self.hv.admit_serving_request(sess.slice_id, len(prompt),
+                                      max_new_tokens)
+        sess.submitted += 1
+        req = self.engine_for(tenant).submit(prompt, max_new_tokens,
+                                             tenant=tenant)
+        req._session = sess
+        return req
+
+    def step(self) -> int:
+        """One decode step on EVERY active engine (devices run concurrently
+        in hardware; ``last_round_ms`` records each device's wall time so
+        callers can account device-parallel time). Periodically sweeps for
+        stragglers and autoscales."""
+        total = 0
+        self.last_round_ms = {}
+        for dev in list(self._engines):
+            eng = self._engines.get(dev)
+            if eng is None:      # parked by a hand-off mid-round
+                continue
+            t0 = time.monotonic()
+            n = eng.step()
+            if n:
+                self.last_round_ms[dev] = (time.monotonic() - t0) * 1e3
+            total += n
+        self.steps += 1
+        if self.migrate_every and self.steps % self.migrate_every == 0:
+            self.rebalance()
+        if self.autoscale_every and self.steps % self.autoscale_every == 0:
+            self.autoscale()
+        return total
+
+    def run_until_idle(self, max_steps: int = 10000):
+        for _ in range(max_steps):
+            if self.step() == 0 and \
+                    all(e.idle() for e in self._engines.values()):
+                return
+
+    # ------------------------------------------------------------------
+    # Telemetry -> control plane (same attribution as the single gateway,
+    # but totals are per engine: each device's step is its own event)
+    # ------------------------------------------------------------------
+    def _on_step(self, device_id: str, active_by_tenant: Dict[str, int],
+                 step_ms: float):
+        total = sum(active_by_tenant.values()) or 1
+        for tenant, n in active_by_tenant.items():
+            sess = self._sessions.get(tenant)
+            if sess is None:
+                continue
+            self.hv.record_serving_step(
+                sess.slice_id, step_ms * n / (total * sess.slots))
+
+    def _on_finish(self, req: Request):
+        settle_finished_request(self.hv, self._sessions, req)
+
+    # ------------------------------------------------------------------
+    # Live migration hand-off
+    # ------------------------------------------------------------------
+    def _on_migration(self, old: str, new: str):
+        """Hypervisor re-placed a slice: rebind the session AND move its
+        traffic. Queued + in-flight requests are drained from the source
+        engine and resumed on the target's — generated tokens survive the
+        move (prompt-prefix replay into the target's KV cache)."""
+        sess = next((s for s in self._sessions.values()
+                     if s.slice_id == old), None)
+        if sess is None:
+            return
+        sess.slice_id = new
+        self.migrations.append((old, new))
+        new_dev = self.hv.db.find_slice(new).device_id
+        old_dev = self._device_of.get(sess.tenant)
+        if new_dev == old_dev:
+            return
+        self._device_of[sess.tenant] = new_dev
+        target = self._ensure_engine(new_dev)
+        source = self._engines.get(old_dev)
+        moved: List[Request] = []
+        if source is not None:
+            moved = source.drain_tenant(sess.tenant)
+            source.set_tenant_share(sess.tenant, None)
+        target.set_tenant_share(sess.tenant, sess.slots)
+        for r in moved:
+            target.resume(r)
+        event = {"tenant": sess.tenant, "old": old, "new": new,
+                 "old_device": old_dev, "new_device": new_dev,
+                 "moved_requests": len(moved)}
+        self.handoffs.append(event)
+        self.hv._log("handoff", **event)
+
+    def rebalance(self) -> List[Tuple[str, str]]:
+        """Straggler sweep; hand-offs happen in the migration listener."""
+        self.hv.migrate_stragglers()
+        return self.hv.last_migrations
+
+    # ------------------------------------------------------------------
+    # Elastic scaling (queue depth <-> energy policy)
+    # ------------------------------------------------------------------
+    def queued_by_device(self) -> Dict[str, int]:
+        return {dev: sum(e.queued_by_tenant().values())
+                for dev, e in self._engines.items()}
+
+    def autoscale(self) -> Optional[str]:
+        """Scale out when the aggregate backlog outgrows the active fleet:
+        wake a PARKED device and move the deepest-queued tenant onto it
+        (the hand-off listener carries the traffic). Always parks empty
+        idle engines on the way out. Returns the woken device id, if any.
+        """
+        queued = self.queued_by_device()
+        n_active = max(1, len(self._engines))
+        woken = None
+        if sum(queued.values()) >= self.scale_up_queue_depth * n_active:
+            tenant = self._deepest_queued_tenant()
+            if tenant is not None:
+                new = self.elastic.scale_out(self._sessions[tenant].slice_id)
+                if new is not None:
+                    woken = new.device_id
+        self.park_idle_engines()
+        return woken
+
+    def _deepest_queued_tenant(self) -> Optional[str]:
+        best, depth = None, 0
+        for eng in self._engines.values():
+            for tenant, n in eng.queued_by_tenant().items():
+                if n > depth and tenant in self._sessions:
+                    best, depth = tenant, n
+        return best
+
+    # ------------------------------------------------------------------
+    def stats(self) -> dict:
+        return {t: {"slice": s.slice_id, "device": self._device_of.get(t),
+                    "slots": s.slots, "submitted": s.submitted,
+                    "served": s.served, "tokens_out": s.tokens_out,
+                    "quota": self.hv.admission.usage(t)}
+                for t, s in self._sessions.items()}
+
+    def fleet_stats(self) -> dict:
+        return {dev: {"active": sum(e.active_by_tenant().values()),
+                      "queued": sum(e.queued_by_tenant().values()),
+                      "steps": e.steps}
+                for dev, e in self._engines.items()}

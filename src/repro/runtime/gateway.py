@@ -16,6 +16,11 @@ the straggler monitor. The gateway closes that gap:
     and gets migrated by the existing ``Hypervisor.migrate_stragglers``;
   * every completed request is logged against its vSlice in
     ``Hypervisor.log`` — the audit trail the paper's middleware keeps.
+
+One gateway owns ONE engine (one shared device). For serving across the
+whole device fleet — placement that follows the DeviceDB, live hand-off of
+in-flight requests on migration, elastic scale-out/park — use
+``repro.runtime.fleet.GatewayFleet``.
 """
 from __future__ import annotations
 
@@ -42,6 +47,37 @@ class TenantSession:
     submitted: int = 0
     served: int = 0
     tokens_out: int = 0
+
+
+def validate_submit(prompt, max_new_tokens: int, max_len: int) -> None:
+    """Shared structural request checks (gateway AND fleet), applied BEFORE
+    any quota is consumed so a rejection never leaks in-flight count."""
+    if len(prompt) == 0:
+        raise AdmissionError("empty prompt: a request needs at least one "
+                             "prompt token to seed decoding")
+    if len(prompt) + max_new_tokens > max_len:
+        raise AdmissionError(
+            f"request needs {len(prompt) + max_new_tokens} cache "
+            f"positions, engine max_len is {max_len}")
+
+
+def settle_finished_request(hv: Hypervisor,
+                            sessions: Dict[str, TenantSession],
+                            req: Request) -> None:
+    """Account a completed request to its session and the hypervisor audit
+    log — unless the submitting session closed while it decoded (possibly
+    a new session reopened under the same tenant name), in which case its
+    quota was already settled by close_session."""
+    sess = sessions.get(req.tenant)
+    if sess is None or sess is not getattr(req, "_session", None):
+        return
+    sess.served += 1
+    sess.tokens_out += len(req.out_tokens)
+    latency_ms = ((req.finished_at or time.monotonic())
+                  - req.submitted_at) * 1e3
+    hv.record_served_request(sess.slice_id, req.tenant, req.request_id,
+                             len(req.prompt), len(req.out_tokens),
+                             latency_ms)
 
 
 class ServingGateway:
@@ -134,10 +170,7 @@ class ServingGateway:
         except KeyError:
             raise KeyError(f"tenant {tenant!r} has no serving session "
                            "(call open_session first)") from None
-        if len(prompt) + max_new_tokens > self.engine.max_len:
-            raise AdmissionError(
-                f"request needs {len(prompt) + max_new_tokens} cache "
-                f"positions, engine max_len is {self.engine.max_len}")
+        validate_submit(prompt, max_new_tokens, self.engine.max_len)
         self.hv.admit_serving_request(sess.slice_id, len(prompt),
                                       max_new_tokens)
         sess.submitted += 1
@@ -179,19 +212,7 @@ class ServingGateway:
                 sess.slice_id, step_ms * n / (total * sess.slots))
 
     def _on_finish(self, req: Request):
-        sess = self._sessions.get(req.tenant)
-        if sess is None or sess is not getattr(req, "_session", None):
-            # the submitting session closed while this request was still
-            # decoding (possibly a new session reopened under the same
-            # tenant name); its quota was already settled by close_session
-            return
-        sess.served += 1
-        sess.tokens_out += len(req.out_tokens)
-        latency_ms = ((req.finished_at or time.monotonic())
-                      - req.submitted_at) * 1e3
-        self.hv.record_served_request(sess.slice_id, req.tenant,
-                                      req.request_id, len(req.prompt),
-                                      len(req.out_tokens), latency_ms)
+        settle_finished_request(self.hv, self._sessions, req)
 
     def _on_migration(self, old: str, new: str):
         for sess in self._sessions.values():

@@ -7,10 +7,12 @@ lowers for decode_32k / long_500k cells.
 from __future__ import annotations
 
 import dataclasses
+import functools
+import itertools
 import queue
 import threading
 import time
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, Iterator, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -65,6 +67,31 @@ def jit_serve_step(model: Model, mesh: Mesh, batch: int, cache_len: int,
 # Continuous batching engine (BAaaS dataplane)
 # ---------------------------------------------------------------------------
 
+@functools.lru_cache(maxsize=8)
+def _prefill_jit(model: Model, max_len: int):
+    """One jitted prefill per (model, max_len), shared across engines —
+    a fleet spinning an engine up on a freshly woken device must not pay a
+    new trace/compile mid-hand-off. (Model is a frozen dataclass of config
+    only, so the cache key is cheap and value-equal across engines.)
+
+    Bounded: the engine is hypervisor-independent, so prefill programs
+    live in this small LRU rather than the RC3E ProgramCache the gateway/
+    fleet route the decode program through; 8 (model, max_len) pairs cover
+    any realistic co-resident serving mix without pinning executables for
+    every config a long-lived process ever touched."""
+    step = make_prefill_step(model, max_len)
+    return jax.jit(lambda p, toks: step(p, {"tokens": toks}))
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _splice_slot(full, one, slot):
+    """Write a batch-1 prefill cache into row ``slot`` of shared caches.
+    The old cache tree is donated: only one slot row changes, and without
+    donation every admission would copy the entire fleet of KV buffers."""
+    return jax.tree.map(
+        lambda f, o: f.at[:, slot].set(o[:, 0].astype(f.dtype)), full, one)
+
+
 @dataclasses.dataclass
 class Request:
     request_id: int
@@ -91,8 +118,14 @@ class BatchingEngine:
     Greedy decoding (argmax) — deterministic, testable.
     """
 
+    # contexts shorter than this prefill through the (already compiled)
+    # decode program; longer ones get the batched prefill call
+    PREFILL_MIN_TOKENS = 4
+
     def __init__(self, model: Model, params, n_slots: int = 4,
-                 max_len: int = 256, eos_id: Optional[int] = None):
+                 max_len: int = 256, eos_id: Optional[int] = None,
+                 prefill_mode: str = "batched",
+                 id_counter: Optional[Iterator[int]] = None):
         # Slot recycling relies on position-masked KV caches (stale entries
         # carry positions > current and are masked out). SSM state has no
         # such masking, so the engine serves attention-family models; SSM
@@ -100,20 +133,36 @@ class BatchingEngine:
         if model.cfg.ssm is not None:
             raise ValueError("BatchingEngine supports attention-family "
                              "models; use jit_serve_step for SSM archs")
+        if prefill_mode not in ("batched", "legacy"):
+            raise ValueError(f"unknown prefill_mode {prefill_mode!r}")
         self.model = model
         self.params = params
         self.n_slots = n_slots
         self.max_len = max_len
         self.eos_id = eos_id
+        self.prefill_mode = prefill_mode
         self._queues: "Dict[str, queue.Queue[Request]]" = {}
         self._tenant_share: Dict[str, int] = {}      # max concurrent slots
         self._rr_offset = 0                          # round-robin cursor
-        self._next_id = 0
+        # request ids: a fleet passes one shared counter to every engine so
+        # ids stay unique across devices (the hypervisor audit log and a
+        # live hand-off both key on them)
+        self._ids = id_counter if id_counter is not None \
+            else itertools.count()
         self.caches = model.make_caches(n_slots, max_len)
         self._slots: List[Optional[Request]] = [None] * n_slots
         self._pos = np.zeros((n_slots,), np.int32)
         self._decode = jax.jit(
             lambda p, c, t, pos: model.decode(p, c, t, pos))
+        # batched slot prefill: model.prefill over the prompt, spliced into
+        # this slot's row of the shared caches. Padding a prefill past the
+        # shortest layer cache (a local-attention window) would evict real
+        # in-window history, so pad buckets are clamped to it.
+        self._prefill = _prefill_jit(model, max_len)
+        self._splice = _splice_slot
+        lens = [l.shape[2] for l in jax.tree.leaves(self.caches)
+                if getattr(l, "ndim", 0) >= 3]
+        self._min_cache_len = min(lens) if lens else max_len
         self.steps = 0
         # hooks for the serving gateway: called after every decode step /
         # on every request completion
@@ -136,27 +185,56 @@ class BatchingEngine:
 
     def submit(self, prompt, max_new_tokens: int = 16,
                tenant: str = "default") -> Request:
-        req = Request(self._next_id, np.asarray(prompt, np.int32),
-                      max_new_tokens, tenant=tenant)
-        self._next_id += 1
+        prompt = np.asarray(prompt, np.int32)
+        if prompt.size == 0:
+            raise ValueError("empty prompt: a request needs at least one "
+                             "prompt token to seed decoding")
+        req = Request(next(self._ids), prompt, max_new_tokens, tenant=tenant)
         self._queues.setdefault(tenant, queue.Queue()).put(req)
         return req
 
+    def resume(self, req: Request) -> Request:
+        """Requeue a request drained from another engine (live migration):
+        its already-generated tokens are preserved and replayed as a prompt
+        prefix when the request is re-admitted (see ``_admit``)."""
+        self._queues.setdefault(req.tenant, queue.Queue()).put(req)
+        return req
+
     # ---------------- tenant bookkeeping ----------------
+    def _drain_queue(self, tenant: str) -> List[Request]:
+        """Remove and return all of a tenant's queued requests."""
+        q = self._queues.pop(tenant, None)
+        drained: List[Request] = []
+        while q is not None:
+            try:
+                drained.append(q.get_nowait())
+            except queue.Empty:
+                break
+        return drained
+
     def cancel_queued(self, tenant: str) -> List[Request]:
         """Drop a tenant's not-yet-admitted requests (e.g. its serving
         session closed). Returns the cancelled requests, marked done."""
-        q = self._queues.pop(tenant, None)
-        dropped: List[Request] = []
-        while q is not None:
-            try:
-                dropped.append(q.get_nowait())
-            except queue.Empty:
-                break
+        dropped = self._drain_queue(tenant)
         for r in dropped:
             r.finished_at = time.monotonic()
             r.done.set()
         return dropped
+
+    def drain_tenant(self, tenant: str) -> List[Request]:
+        """Evict a tenant's in-flight and queued requests for live hand-off
+        to another engine. In-flight requests keep their generated tokens
+        (``resume`` on the target replays them as a prompt prefix); nothing
+        is marked done. Freed slots' stale cache rows stay position-masked
+        until recycled. Returns the requests, in-flight first."""
+        moved: List[Request] = []
+        for i, r in enumerate(self._slots):
+            if r is not None and r.tenant == tenant:
+                self._slots[i] = None
+                self._pos[i] = 0
+                moved.append(r)
+        moved.extend(self._drain_queue(tenant))
+        return moved
 
     def active_by_tenant(self) -> Dict[str, int]:
         counts: Dict[str, int] = {}
@@ -197,14 +275,39 @@ class BatchingEngine:
             req = self._pop_next_request()
             if req is None:
                 return
-            # prefill this slot: run prompt tokens one by one through the
-            # decode path (slot-isolated; avoids cross-slot cache rebuild)
             self._slots[slot] = req
-            toks = req.prompt
-            for i, t in enumerate(toks[:-1]):
-                self._step_single(slot, int(t), i)
+            # a request resumed after live migration replays prompt +
+            # already-generated tokens so decode continues where it left off
+            toks = req.prompt if not req.out_tokens else np.concatenate(
+                [req.prompt, np.asarray(req.out_tokens, np.int32)])
+            ctx = toks[:-1]
+            if len(ctx) >= self.PREFILL_MIN_TOKENS \
+                    and self.prefill_mode == "batched":
+                self._prefill_slot(slot, ctx)
+            else:
+                # short context (or legacy mode): feed tokens through the
+                # already-compiled decode program, slot-isolated
+                for i, t in enumerate(ctx):
+                    self._step_single(slot, int(t), i)
             self._pos[slot] = len(toks) - 1
             req._next_input = int(toks[-1])
+
+    def _prefill_slot(self, slot: int, ctx: np.ndarray):
+        """Prefill a slot's context with ONE batched call instead of one
+        full-batch decode per prompt token (O(S·n_slots) -> O(S) work,
+        O(1) dispatches). Lengths are padded to power-of-two buckets to
+        bound recompiles; padded positions carry pos >= len(ctx), so they
+        are causally masked during decode and overwritten in place when
+        generation reaches them."""
+        n = len(ctx)
+        bucket = 8
+        while bucket < n:
+            bucket *= 2
+        pad = max(n, min(bucket, self._min_cache_len))
+        toks = np.zeros((1, pad), np.int32)
+        toks[0, :n] = ctx
+        _, slot_caches = self._prefill(self.params, jnp.asarray(toks))
+        self.caches = self._splice(self.caches, slot_caches, slot)
 
     def _step_single(self, slot: int, token: int, pos: int):
         tokens = np.zeros((self.n_slots, 1), np.int32)

@@ -274,3 +274,26 @@ def test_baaas_hides_allocation():
     assert np.allclose(out[0], np.ones((16, 16)))
     # allocation fully reclaimed afterwards
     assert all(u == 0.0 for u in hv.db.utilization().values())
+
+
+def test_invoke_service_explicit_args_vs_example_inputs():
+    """args=None runs the registered example inputs; an explicit tuple —
+    INCLUDING the empty tuple for a zero-input core — is passed through
+    verbatim (the old falsy check conflated () with "use the examples")."""
+    import numpy as np
+    hv = Hypervisor(ClusterSpec())
+    hv.register_service("double", lambda: (
+        lambda a: (a * 2,), (np.ones((4,), np.float32),)))
+    hv.register_service("const7", lambda: (
+        lambda: (np.full((3,), 7.0, np.float32),), ()))
+
+    out = hv.invoke_service("double", "u")                 # example inputs
+    np.testing.assert_allclose(out[0], np.full((4,), 2.0))
+    out = hv.invoke_service("double", "u",
+                            (np.arange(4, dtype=np.float32),))
+    np.testing.assert_allclose(out[0], [0, 2, 4, 6])
+    # zero-input core: explicit () must NOT be replaced by example inputs
+    out = hv.invoke_service("const7", "u", ())
+    np.testing.assert_allclose(out[0], np.full((3,), 7.0))
+    out = hv.invoke_service("const7", "u")                 # None: examples
+    np.testing.assert_allclose(out[0], np.full((3,), 7.0))

@@ -70,6 +70,16 @@ def test_straggler_migration():
         hv.db.find_slice(slow.slice_id)   # old slice released
 
 
+def test_failed_directed_migration_restores_prior_state():
+    """migrate_slice with no room elsewhere must leave the slice in its
+    ORIGINAL state — a never-executed slice must not come back RUNNING."""
+    hv = Hypervisor(ClusterSpec(n_nodes=1, devices_per_node=2))
+    vs = hv.allocate_vslice("t", 1)                  # ALLOCATED, never ran
+    hv.allocate_vslice("hog", 4)                     # fills the other device
+    assert hv.migrate_slice(vs.slice_id) is None
+    assert hv.db.find_slice(vs.slice_id).state == SliceState.ALLOCATED
+
+
 def test_elastic_resize_carries_program():
     hv = Hypervisor(ClusterSpec(n_nodes=2, devices_per_node=2))
     ec = ElasticController(hv)

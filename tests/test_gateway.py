@@ -165,6 +165,23 @@ def test_reopened_session_not_charged_for_orphan_requests(served_model):
     gw.close()
 
 
+def test_empty_prompt_rejected_before_quota(served_model):
+    """A zero-length prompt used to reach BatchingEngine._admit and crash
+    with IndexError on toks[-1]; it must be rejected at submit, without
+    consuming in-flight quota."""
+    cfg, model, params = served_model
+    hv = Hypervisor(ClusterSpec(n_nodes=1, devices_per_node=1))
+    gw = ServingGateway(hv, model, params, n_slots=2, max_len=64)
+    gw.open_session("t", slots=1)
+    with pytest.raises(AdmissionError, match="empty prompt"):
+        gw.submit("t", [], max_new_tokens=4)
+    assert hv.admission.usage("t")["inflight"] == 0
+    gw.submit("t", _prompt(cfg), max_new_tokens=4)    # normal traffic fine
+    gw.run_until_idle()
+    assert gw.session("t").served == 1
+    gw.close()
+
+
 def test_request_exceeding_engine_max_len_rejected(served_model):
     """A request that cannot fit the KV cache is rejected at admission
     instead of silently corrupting a slot."""

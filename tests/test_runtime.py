@@ -209,3 +209,42 @@ def test_engine_rejects_ssm():
     m = get_model(cfg)
     with pytest.raises(ValueError):
         BatchingEngine(m, m.init(jax.random.PRNGKey(0)))
+
+
+def test_engine_rejects_empty_prompt():
+    """A zero-length prompt used to crash _admit with IndexError on
+    toks[-1]; it must be rejected up front with a clear error."""
+    from repro.runtime import BatchingEngine
+    cfg = reduced(get_config("smollm-135m")).replace(dtype="float32")
+    m = get_model(cfg)
+    engine = BatchingEngine(m, m.init(jax.random.PRNGKey(0)), n_slots=2,
+                            max_len=64)
+    with pytest.raises(ValueError, match="empty prompt"):
+        engine.submit([], max_new_tokens=4)
+    with pytest.raises(ValueError, match="empty prompt"):
+        engine.submit(np.zeros((0,), np.int32))
+    assert engine.idle()
+
+
+def test_batched_prefill_matches_legacy_token_loop():
+    """Regression for the O(prompt_len x n_slots) prefill bug: prefilling a
+    slot with ONE batched model.prefill call must produce exactly the
+    tokens of the old one-full-batch-decode-per-prompt-token path.
+    Prompt lengths straddle the pad-bucket boundaries (8, 16)."""
+    from repro.runtime import BatchingEngine
+    cfg = reduced(get_config("smollm-135m")).replace(dtype="float32")
+    m = get_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, cfg.vocab_size, size=n).tolist()
+               for n in (5, 8, 9, 13, 17)]
+
+    def serve(mode):
+        engine = BatchingEngine(m, params, n_slots=2, max_len=64,
+                                prefill_mode=mode)
+        reqs = [engine.submit(p, max_new_tokens=6) for p in prompts]
+        engine.run_until_idle()
+        assert all(len(r.out_tokens) == 6 for r in reqs)
+        return [r.out_tokens for r in reqs]
+
+    assert serve("batched") == serve("legacy")

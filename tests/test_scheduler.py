@@ -77,6 +77,72 @@ def test_failed_terminal_job_not_rescheduled():
     assert sched.schedule_once() == []
 
 
+def test_large_job_not_starved_by_small_stream():
+    """A 4-slot job repeatedly deferred by NoCapacityError must not be
+    bypassed forever by a stream of 1-slot jobs behind it: after
+    ``starvation_patience`` deferred passes the scheduler holds capacity
+    back for it."""
+    sched = BatchScheduler(make_db(devs=1), starvation_patience=3)
+    blocker = sched.submit("u", 1, priority=5)
+    assert sched.schedule_once() == [blocker]     # 1 of 4 slots busy
+    big = sched.submit("big", 4, priority=5)
+    admitted_after_holdback = []
+    held = False
+    for i in range(8):
+        small = sched.submit("u", 1, priority=5)
+        started = sched.schedule_once()
+        assert big not in started                 # blocker still holds a slot
+        if held:
+            admitted_after_holdback += started
+        for j in started:
+            if j is not blocker:
+                sched.complete(j.job_id)          # smalls come and go
+        held = held or big.deferrals >= 3
+    assert held, "big job never reached the hold-back threshold"
+    # once held back, the small stream stops being admitted past it
+    assert admitted_after_holdback == []
+    assert any(h["kind"] == "holdback" and h["job"] == big.job_id
+               for h in sched.history)
+    # when the blocker finally frees its slot, the big job runs first
+    sched.complete(blocker.job_id)
+    started = sched.schedule_once()
+    assert big in started and big.state == JobState.RUNNING
+    assert big.deferrals == 0                     # aging reset on admission
+    # the held-back smalls run afterwards
+    sched.complete(big.job_id)
+    assert len(sched.schedule_once()) == 4        # backlog drains again
+
+
+def test_holdback_skipped_when_job_can_never_fit():
+    """Escape hatch: if the capacity blocking a large job belongs to
+    allocations the scheduler does not control (e.g. serving sessions),
+    holding the queue back would starve everyone forever — backfill must
+    continue."""
+    db = make_db(devs=1)
+    db.allocate_slice("serving-tenant", 2, "baas")   # outside the scheduler
+    sched = BatchScheduler(db, starvation_patience=1)
+    big = sched.submit("big", 4, priority=5)         # can never fit
+    for _ in range(5):
+        small = sched.submit("u", 1, priority=5)
+        started = sched.schedule_once()
+        assert small in started                      # backfill continues
+        sched.complete(small.job_id)
+    assert big.deferrals >= 5
+    assert not any(h["kind"] == "holdback" for h in sched.history)
+
+
+def test_holdback_does_not_block_higher_priority():
+    """Hold-back stops BACKFILL behind the starved job; jobs of strictly
+    higher priority still pop first and run."""
+    sched = BatchScheduler(make_db(devs=1), starvation_patience=1)
+    blocker = sched.submit("u", 1, priority=5)
+    sched.schedule_once()
+    big = sched.submit("big", 4, priority=5)
+    sched.schedule_once()                         # big deferred -> held
+    urgent = sched.submit("u", 1, priority=1)
+    assert urgent in sched.schedule_once()
+
+
 def test_hypervisor_scheduler_integration():
     """The hypervisor's scheduler admits by priority under real capacity."""
     hv = Hypervisor(ClusterSpec(n_nodes=1, devices_per_node=1))
@@ -88,3 +154,19 @@ def test_hypervisor_scheduler_integration():
     hv.scheduler.run_pending()
     hv.scheduler.run_pending()
     assert order == ["high", "low"]
+
+
+def test_migrate_slice_rebinds_running_batch_job():
+    """A batch job whose slice is migrated (directed move / consolidate /
+    straggler sweep) must follow it: complete() releases the NEW slice
+    instead of crashing on the released old one and leaking the new."""
+    hv = Hypervisor(ClusterSpec(n_nodes=1, devices_per_node=2))
+    job = hv.scheduler.submit("u", 2)
+    assert hv.scheduler.schedule_once() == [job]
+    old = job.slice_id
+    new = hv.migrate_slice(old, target_device="dev-0-1", reason="ops")
+    assert new is not None
+    assert job.slice_id == new.slice_id != old
+    hv.scheduler.complete(job.job_id)           # no KeyError
+    assert job.state == JobState.DONE
+    assert all(u == 0.0 for u in hv.db.utilization().values())
