@@ -1,5 +1,7 @@
 """BAaaS serving: a provider-prebuilt LM served behind the hypervisor with
-continuous batching — users submit prompts, never see devices (paper §III-C).
+continuous batching over a PAGED KV-cache pool — users submit prompts,
+never see devices (paper §III-C); device memory is virtualized into pages
+exactly as compute is virtualized into vSlices.
 
 Run:  PYTHONPATH=src python examples/serve_baas.py
 """
@@ -22,26 +24,36 @@ def main():
     model = get_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     vs = hv.allocate_vslice("provider:lm-service", slots=2, service_model="baas")
-    engine = BatchingEngine(model, params, n_slots=4, max_len=96)
-    print(f"lm-service up on {vs.slice_id} ({vs.device_id}), 4 decode slots")
+    # 8 slots share a page pool holding only 4 dense rows' worth of cache:
+    # short requests take 1-2 pages instead of a whole max_len row
+    engine = BatchingEngine(model, params, n_slots=8, max_len=96,
+                            paged=True, page_size=16,
+                            cache_pages=4 * (96 // 16) + 1)
+    print(f"lm-service up on {vs.slice_id} ({vs.device_id}), 8 decode "
+          f"slots over a {engine.pool.total_pages}-page KV pool")
 
     rng = np.random.default_rng(0)
     prompts = [rng.integers(0, cfg.vocab_size, size=n).tolist()
                for n in (5, 3, 8, 4, 6, 2, 7, 5)]
+    # two of a kind: identical prompts admitted together share prefix
+    # pages copy-on-write
+    prompts[1] = list(prompts[0])
     t0 = time.monotonic()
     reqs = [engine.submit(p, max_new_tokens=12) for p in prompts]
-    engine.run_until_idle()
+    drained = engine.run_until_idle()
+    assert drained, "engine stalled with work still queued"
 
     total_new = sum(len(r.out_tokens) for r in reqs)
     wall = time.monotonic() - t0
     for r in reqs:
         ttft = (r.first_token_at - r.submitted_at) * 1e3
         print(f"req {r.request_id}: prompt {len(r.prompt)} tok -> "
-              f"{len(r.out_tokens)} new, TTFT {ttft:.0f} ms, "
-              f"tokens {r.out_tokens[:6]}...")
+              f"{len(r.out_tokens)} new ({r.finish_reason}), "
+              f"TTFT {ttft:.0f} ms, tokens {r.out_tokens[:6]}...")
     print(f"\n{len(reqs)} requests, {total_new} tokens in {wall:.2f}s "
           f"({total_new / wall:.1f} tok/s aggregate, {engine.steps} engine "
           "steps — continuous batching shares every step across slots)")
+    print(f"page pool: {engine.page_stats()}")
     hv.release(vs.slice_id)
 
 

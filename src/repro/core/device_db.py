@@ -47,6 +47,11 @@ class VSlice:
     service_model: Optional[str] = None   # rsaas | raas | baas
     program: Optional[str] = None         # executable fingerprint
     step_times_ms: List[float] = field(default_factory=list)
+    # device-memory dimension: KV-cache pool pages granted to this slice
+    # (0 = unmetered/dense). Compute (slots) and memory (pages) are
+    # virtualized separately, so a small-compute long-context tenant is
+    # expressible — and accountable.
+    cache_pages: int = 0
 
 
 @dataclass
@@ -56,6 +61,7 @@ class PhysicalDevice:
     chips: int                         # e.g. 64 chips per vSlice-slot group
     state: DeviceState = DeviceState.PARKED
     slices: Dict[str, VSlice] = field(default_factory=dict)
+    cache_pages: int = 0               # pool pages this device's HBM holds
 
     def used_slots(self) -> int:
         return sum(s.slots for s in self.slices.values()
@@ -63,6 +69,10 @@ class PhysicalDevice:
 
     def free_slots(self) -> int:
         return MAX_SLOTS - self.used_slots()
+
+    def granted_cache_pages(self) -> int:
+        return sum(s.cache_pages for s in self.slices.values()
+                   if s.state != SliceState.FREE)
 
 
 @dataclass
@@ -91,13 +101,15 @@ class DeviceDB:
             self.nodes[node_id] = n
             return n
 
-    def add_device(self, device_id: str, node_id: str, chips: int = 256):
+    def add_device(self, device_id: str, node_id: str, chips: int = 256,
+                   cache_pages: int = 0):
         with self._lock:
             if device_id in self.devices:
                 raise ValueError(f"device {device_id} exists")
             if node_id not in self.nodes:
                 raise KeyError(f"no node {node_id}")
-            d = PhysicalDevice(device_id, node_id, chips)
+            d = PhysicalDevice(device_id, node_id, chips,
+                               cache_pages=cache_pages)
             self.devices[device_id] = d
             self.nodes[node_id].devices.append(device_id)
             return d
@@ -121,6 +133,12 @@ class DeviceDB:
         return {d.device_id: d.used_slots() / MAX_SLOTS
                 for d in self.devices.values()}
 
+    def page_grants(self) -> Dict[str, float]:
+        """Fraction of each metered device's page pool granted to slices
+        (the memory-dimension twin of ``utilization``)."""
+        return {d.device_id: d.granted_cache_pages() / d.cache_pages
+                for d in self.devices.values() if d.cache_pages}
+
     # ---------------- allocation ----------------
     def _alive_devices(self):
         return [d for d in self.devices.values()
@@ -143,10 +161,14 @@ class DeviceDB:
 
     def allocate_slice(self, owner: str, slots: int, service_model: str,
                        device_id: Optional[str] = None,
-                       exclude_device: Optional[str] = None) -> VSlice:
+                       exclude_device: Optional[str] = None,
+                       cache_pages: int = 0) -> VSlice:
         """Pack-first placement (energy policy): prefer ACTIVE devices with
         the least free slots that still fit, park-wake only if needed.
-        ``exclude_device`` supports straggler migration (must move away)."""
+        ``exclude_device`` supports straggler migration (must move away).
+        ``cache_pages`` grants the slice a share of the device's KV page
+        pool; a device whose pool is fully granted no longer fits
+        page-bearing slices even when it has free compute slots."""
         if slots not in (1, 2, 4):
             raise ValueError("slots must be 1, 2 or 4")
         with self._lock:
@@ -157,16 +179,23 @@ class DeviceDB:
                 cands = [d for d in cands if d.device_id != exclude_device]
             cands = [d for d in cands
                      if d.state != DeviceState.EXCLUSIVE
-                     and d.free_slots() >= slots]
+                     and d.free_slots() >= slots
+                     and (not cache_pages or not d.cache_pages
+                          or d.granted_cache_pages() + cache_pages
+                          <= d.cache_pages)]
             if not cands:
-                raise NoCapacityError(f"no device with {slots} free slots")
+                raise NoCapacityError(
+                    f"no device with {slots} free slots"
+                    + (f" and {cache_pages} free cache pages"
+                       if cache_pages else ""))
             # pack-first: fewest free slots among ACTIVE, then PARKED
             cands.sort(key=lambda d: (d.state != DeviceState.ACTIVE,
                                       d.free_slots(), d.device_id))
             dev = cands[0]
             self._slice_counter += 1
             vs = VSlice(f"vs-{self._slice_counter:05d}", dev.device_id, slots,
-                        SliceState.ALLOCATED, owner, service_model)
+                        SliceState.ALLOCATED, owner, service_model,
+                        cache_pages=cache_pages)
             dev.slices[vs.slice_id] = vs
             dev.state = DeviceState.ACTIVE
             return vs

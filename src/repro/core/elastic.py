@@ -64,6 +64,28 @@ class ElasticController:
             self.hv._log("elastic_scale_out", slice=new.slice_id, device=dev)
         return new
 
+    def scale_out_on_page_pressure(self, hottest_slice_of: dict,
+                                   threshold: float = 0.85
+                                   ) -> Optional[VSlice]:
+        """Memory-side elastic scaling: when a device's KV page pool runs
+        hot (occupancy pushed into the monitor by the serving dataplane),
+        move its hottest tenant's slice onto a woken PARKED device — queue
+        depth says nothing about long-context tenants whose *pages* are
+        the bottleneck. ``hottest_slice_of`` maps device_id -> slice_id of
+        the tenant best worth moving (the fleet computes it from per-slot
+        page counts). Returns the new slice, or None when no device is
+        pressured or no parked capacity exists."""
+        for dev in self.hv.monitor.find_page_pressure(threshold):
+            sid = hottest_slice_of.get(dev)
+            if sid is None:
+                continue
+            new = self.scale_out(sid)
+            if new is not None:
+                self.hv._log("elastic_page_pressure", device=dev,
+                             slice=sid, new_slice=new.slice_id)
+                return new
+        return None
+
     def consolidate(self, device_id: str) -> bool:
         """Drain a device for parking (scale-in): migrate every slice it
         hosts onto the remaining fleet (pack-first). Returns True when the

@@ -33,10 +33,13 @@ from repro.rc2f.admission import AdmissionController, AdmissionError
 
 @dataclass
 class ClusterSpec:
-    """Inventory description, e.g. 2 nodes × 2 devices × 256 chips."""
+    """Inventory description, e.g. 2 nodes × 2 devices × 256 chips.
+    ``cache_pages_per_device`` meters each device's KV page pool (0 =
+    unmetered): page-bearing vSlice grants are then packed against it."""
     n_nodes: int = 2
     devices_per_node: int = 2
     chips_per_device: int = 256
+    cache_pages_per_device: int = 0
 
 
 class Hypervisor:
@@ -51,7 +54,8 @@ class Hypervisor:
             node.last_heartbeat = clock()
             for di in range(spec.devices_per_node):
                 self.db.add_device(f"dev-{ni}-{di}", node.node_id,
-                                   spec.chips_per_device)
+                                   spec.chips_per_device,
+                                   cache_pages=spec.cache_pages_per_device)
         self.reconfig = Reconfigurator(ProgramCache())
         self.scheduler = BatchScheduler(self.db, clock)
         self.monitor = Monitor(self.db,
@@ -84,10 +88,12 @@ class Hypervisor:
 
     # ---------------- RAaaS ----------------
     def allocate_vslice(self, owner: str, slots: int = 1,
-                        service_model: str = "raas") -> VSlice:
-        vs = self.db.allocate_slice(owner, slots, service_model)
+                        service_model: str = "raas",
+                        cache_pages: int = 0) -> VSlice:
+        vs = self.db.allocate_slice(owner, slots, service_model,
+                                    cache_pages=cache_pages)
         self._log("vslice_alloc", owner=owner, slice=vs.slice_id,
-                  device=vs.device_id, slots=slots)
+                  device=vs.device_id, slots=slots, cache_pages=cache_pages)
         return vs
 
     def release(self, slice_id: str):
@@ -153,20 +159,29 @@ class Hypervisor:
     # Serving gateway tenant sessions (shared-device inference traffic)
     # ------------------------------------------------------------------
     def open_serving_session(self, tenant: str, slots: int = 1,
-                             service_model: str = "baas") -> VSlice:
+                             service_model: str = "baas",
+                             cache_pages: int = 0) -> VSlice:
         """Admit a tenant (quota check) and bind it to a vSlice. Every
         serving request is attributed to this slice in ``log`` and the
         monitor, so stragglers among serving tenants migrate exactly like
-        batch workloads."""
+        batch workloads. ``cache_pages`` grants the slice a share of the
+        device's KV page pool, clamped to the service model's
+        ``max_cache_pages_per_tenant`` quota (the memory dimension of the
+        vSlice)."""
+        quota = self.admission.quota_for(service_model)
+        if quota.max_cache_pages_per_tenant and cache_pages:
+            cache_pages = min(cache_pages,
+                              quota.max_cache_pages_per_tenant)
         self.admission.admit_tenant(tenant, service_model, slots)
         try:
-            vs = self.allocate_vslice(tenant, slots, service_model)
+            vs = self.allocate_vslice(tenant, slots, service_model,
+                                      cache_pages=cache_pages)
         except Exception:   # NoCapacityError, bad slot count, ...
             self.admission.release_tenant(tenant, service_model, slots)
             raise
         self._log("session_open", tenant=tenant, slice=vs.slice_id,
                   device=vs.device_id, slots=slots,
-                  service_model=service_model)
+                  service_model=service_model, cache_pages=cache_pages)
         return vs
 
     def close_serving_session(self, slice_id: str):
@@ -239,7 +254,8 @@ class Hypervisor:
             new = self.db.allocate_slice(vs.owner, vs.slots,
                                          vs.service_model or "raas",
                                          device_id=target_device,
-                                         exclude_device=old_dev)
+                                         exclude_device=old_dev,
+                                         cache_pages=vs.cache_pages)
         except NoCapacityError:
             # nowhere better to go; keep the original placement AND state
             # (a directed move may target a never-executed slice)

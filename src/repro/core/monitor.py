@@ -13,7 +13,7 @@ from __future__ import annotations
 import statistics
 import time
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core.device_db import DeviceDB, VSlice
 
@@ -35,6 +35,7 @@ class Monitor:
         self.clock = clock
         self._step_times: Dict[str, List[float]] = {}
         self._straggler_strikes: Dict[str, int] = {}
+        self._pages: Dict[str, Tuple[int, int]] = {}   # dev -> (used, total)
         self.events: List[dict] = []
 
     # ---------------- heartbeats ----------------
@@ -91,6 +92,27 @@ class Monitor:
         self._step_times.pop(slice_id, None)
         self._straggler_strikes.pop(slice_id, None)
 
+    # ---------------- KV page occupancy ----------------
+    def record_pages(self, device_id: str, used: int, total: int):
+        """Live KV page-pool occupancy for one device's dataplane (pushed
+        by the serving gateway/fleet each step). ``find_page_pressure``
+        and ``status()`` read it; clearing happens when an engine parks."""
+        self._pages[device_id] = (int(used), int(total))
+
+    def clear_pages(self, device_id: str):
+        self._pages.pop(device_id, None)
+
+    def page_occupancy(self) -> Dict[str, float]:
+        return {dev: used / max(1, total)
+                for dev, (used, total) in self._pages.items()}
+
+    def find_page_pressure(self, threshold: float = 0.85) -> List[str]:
+        """Devices whose page pools run hot — the memory-side scale-out
+        signal (ordered hottest first)."""
+        occ = self.page_occupancy()
+        hot = [dev for dev, o in occ.items() if o >= threshold]
+        return sorted(hot, key=lambda dev: -occ[dev])
+
     # ---------------- status (gcs analogue) ----------------
     def status(self) -> dict:
         return {
@@ -101,5 +123,9 @@ class Monitor:
                            for s in d.slices.values()},
             } for d in self.db.devices.values()},
             "utilization": self.db.utilization(),
+            "pages": {dev: {"used": used, "total": total,
+                            "occupancy": round(used / max(1, total), 4)}
+                      for dev, (used, total) in self._pages.items()},
+            "page_grants": self.db.page_grants(),
             "median_step_ms": self.median_step_ms(),
         }

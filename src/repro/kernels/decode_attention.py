@@ -36,25 +36,15 @@ def _decode_kernel_q8(q_ref, k_ref, v_ref, ks_ref, vs_ref, kpos_ref, cur_ref,
                  window=window)
 
 
-def _decode_body(q_ref, k_ref, v_ref, ks_ref, vs_ref, kpos_ref, cur_ref,
-                 o_ref, acc_ref, m_ref, l_ref, *, n_k: int, scale: float,
-                 window: int):
-    ik = pl.program_id(1)
-
+def _sweep_update(q, k, v, kpos, cur, o_ref, acc_ref, m_ref, l_ref, *,
+                  ik, n_k: int, window: int):
+    """One cache-block step of the online softmax: q (D,), k/v (bk, D) in
+    fp32, kpos (bk,). Shared by the dense and block-table-paged sweeps."""
     @pl.when(ik == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
         m_ref[...] = jnp.full_like(m_ref, NEG_INF)
         l_ref[...] = jnp.zeros_like(l_ref)
-
-    q = q_ref[0].astype(jnp.float32) * scale        # (D,)
-    k = k_ref[0].astype(jnp.float32)                # (bk, D)
-    v = v_ref[0].astype(jnp.float32)
-    if ks_ref is not None:                          # dequantize in VMEM
-        k = k * ks_ref[0][:, None]
-        v = v * vs_ref[0][:, None]
-    kpos = kpos_ref[0]                              # (bk,)
-    cur = cur_ref[0]                                # scalar
 
     s = jnp.dot(k, q, preferred_element_type=jnp.float32)   # (bk,)
     mask = (kpos >= 0) & (kpos <= cur)
@@ -75,6 +65,19 @@ def _decode_body(q_ref, k_ref, v_ref, ks_ref, vs_ref, kpos_ref, cur_ref,
     def _flush():
         o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[0], 1e-30)).astype(
             o_ref.dtype)
+
+
+def _decode_body(q_ref, k_ref, v_ref, ks_ref, vs_ref, kpos_ref, cur_ref,
+                 o_ref, acc_ref, m_ref, l_ref, *, n_k: int, scale: float,
+                 window: int):
+    q = q_ref[0].astype(jnp.float32) * scale        # (D,)
+    k = k_ref[0].astype(jnp.float32)                # (bk, D)
+    v = v_ref[0].astype(jnp.float32)
+    if ks_ref is not None:                          # dequantize in VMEM
+        k = k * ks_ref[0][:, None]
+        v = v * vs_ref[0][:, None]
+    _sweep_update(q, k, v, kpos_ref[0], cur_ref[0], o_ref, acc_ref, m_ref,
+                  l_ref, ik=pl.program_id(1), n_k=n_k, window=window)
 
 
 def decode_attention(q, k, v, kpos, cur, *, window: int = 0,
@@ -135,4 +138,99 @@ def decode_attention(q, k, v, kpos, cur, *, window: int = 0,
         ],
         interpret=interpret,
     )(*operands)
+    return out.reshape(B, Hq, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Paged variant: the cache lives in a shared page pool, each sequence's
+# pages located through a block table (scalar-prefetched so the BlockSpec
+# index maps can read page ids before the DMA is issued).
+# ---------------------------------------------------------------------------
+
+def _paged_kernel(bt_ref, q_ref, k_ref, v_ref, kpos_ref, cur_ref, o_ref,
+                  acc_ref, m_ref, l_ref, *, n_k: int, scale: float,
+                  window: int):
+    q = q_ref[0].astype(jnp.float32) * scale        # (D,)
+    k = k_ref[0, 0].astype(jnp.float32)             # (ps, D)
+    v = v_ref[0, 0].astype(jnp.float32)
+    _sweep_update(q, k, v, kpos_ref[0], cur_ref[0], o_ref, acc_ref, m_ref,
+                  l_ref, ik=pl.program_id(1), n_k=n_k, window=window)
+
+
+def _paged_kernel_q8(bt_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref, kpos_ref,
+                     cur_ref, o_ref, acc_ref, m_ref, l_ref, *, n_k: int,
+                     scale: float, window: int):
+    q = q_ref[0].astype(jnp.float32) * scale
+    k = k_ref[0, 0].astype(jnp.float32) * ks_ref[0, 0][:, None]
+    v = v_ref[0, 0].astype(jnp.float32) * vs_ref[0, 0][:, None]
+    _sweep_update(q, k, v, kpos_ref[0], cur_ref[0], o_ref, acc_ref, m_ref,
+                  l_ref, ik=pl.program_id(1), n_k=n_k, window=window)
+
+
+def paged_decode_attention(q, k_pool, v_pool, kpos_pool, block_tables, cur, *,
+                           window: int = 0, scale: float = 0.0,
+                           k_scale=None, v_scale=None,
+                           interpret: bool = False):
+    """Block-table-indirect decode attention over a shared page pool.
+
+    q (B, Hq, D); k/v pools (P, Hkv, ps, D); kpos_pool (P, ps) absolute
+    positions (-1 = empty); block_tables (B, nb) int32 page ids; cur (B,).
+    The cache sweep walks each sequence's block table: grid step (h, j)
+    DMAs page ``block_tables[b, j]`` straight from the pool — no dense
+    (B, L) cache ever materializes, so HBM holds one copy of every shared
+    (prefix) page. Unused table entries must point at pages whose kpos is
+    -1 (the engine reserves page 0 for this). ``k_scale``/``v_scale``
+    (P, Hkv, ps) enable the int8-pool path. Returns (B, Hq, D)."""
+    B, Hq, D = q.shape
+    Hkv, ps = k_pool.shape[1], k_pool.shape[2]
+    nb = block_tables.shape[1]
+    g = Hq // Hkv
+    scale = scale or D ** -0.5
+    grid = (B * Hq, nb)
+    quant = k_scale is not None
+
+    def kv_map(h, j, bt):
+        return (bt[h // Hq, j], (h % Hq) // g, 0, 0)
+
+    def kvs_map(h, j, bt):
+        return (bt[h // Hq, j], (h % Hq) // g, 0)
+
+    in_specs = [
+        pl.BlockSpec((1, D), lambda h, j, bt: (h, 0)),
+        pl.BlockSpec((1, 1, ps, D), kv_map),
+        pl.BlockSpec((1, 1, ps, D), kv_map),
+    ]
+    operands = [q.reshape(B * Hq, D), k_pool, v_pool]
+    if quant:
+        in_specs += [pl.BlockSpec((1, 1, ps), kvs_map),
+                     pl.BlockSpec((1, 1, ps), kvs_map)]
+        operands += [k_scale, v_scale]
+        kernel = functools.partial(_paged_kernel_q8, n_k=nb, scale=scale,
+                                   window=window)
+    else:
+        kernel = functools.partial(_paged_kernel, n_k=nb, scale=scale,
+                                   window=window)
+    in_specs += [
+        pl.BlockSpec((1, ps), lambda h, j, bt: (bt[h // Hq, j], 0)),
+        pl.BlockSpec((1,), lambda h, j, bt: (h // Hq,)),
+    ]
+    operands += [kpos_pool, cur]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, D), lambda h, j, bt: (h, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((D,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B * Hq, D),
+                                       q.dtype if not quant else jnp.float32),
+        interpret=interpret,
+    )(block_tables, *operands)
     return out.reshape(B, Hq, D).astype(q.dtype)

@@ -11,7 +11,9 @@ from typing import Optional
 import jax
 
 from repro.kernels import ref as _ref
-from repro.kernels.decode_attention import decode_attention as _decode_k
+from repro.kernels.decode_attention import (
+    decode_attention as _decode_k,
+    paged_decode_attention as _paged_decode_k)
 from repro.kernels.flash_attention import flash_attention as _flash_k
 from repro.kernels.mamba2_chunk import ssd_chunk_scan as _ssd_k
 from repro.kernels.stream_matmul import (stream_matmul as _mm_k,
@@ -77,3 +79,18 @@ def decode_attention(q, k, v, kpos, cur, window: int = 0, scale: float = 0.0,
     return _decode_k(q, k, v, kpos, cur, window=window, scale=scale,
                      k_scale=k_scale, v_scale=v_scale,
                      interpret=(m == "interpret"))
+
+
+@functools.partial(jax.jit, static_argnames=("window", "scale", "force"))
+def paged_decode_attention(q, k_pool, v_pool, kpos_pool, block_tables, cur,
+                           window: int = 0, scale: float = 0.0,
+                           k_scale=None, v_scale=None,
+                           force: Optional[str] = None):
+    m = _mode(force)
+    if m == "ref":
+        return _ref.paged_decode_attention_ref(
+            q, k_pool, v_pool, kpos_pool, block_tables, cur, window=window,
+            scale=scale, k_scale=k_scale, v_scale=v_scale)
+    return _paged_decode_k(q, k_pool, v_pool, kpos_pool, block_tables, cur,
+                           window=window, scale=scale, k_scale=k_scale,
+                           v_scale=v_scale, interpret=(m == "interpret"))

@@ -59,6 +59,33 @@ def ssd_chunk_scan_ref(x, dt, Bm, Cm, a, d):
     return jax.vmap(per_row)(x, dt, Bm, Cm, a, d).astype(x.dtype)
 
 
+def paged_decode_attention_ref(q, k_pool, v_pool, kpos_pool, block_tables,
+                               cur, *, window: int = 0, scale: float = 0.0,
+                               k_scale=None, v_scale=None):
+    """Paged-cache oracle: gather pages through the block table into the
+    dense layout, then defer to ``decode_attention_ref``.
+
+    q (B, Hq, D); k/v pools (P, Hkv, ps, D); kpos_pool (P, ps);
+    block_tables (B, nb) int32 page ids; cur (B,). Unused block-table
+    entries must reference pages whose kpos entries are -1 (the engine
+    reserves page 0 for this). ``k_scale``/``v_scale`` (P, Hkv, ps) enable
+    the int8-pool path."""
+    B, nb = block_tables.shape
+    Hkv, ps = k_pool.shape[1], k_pool.shape[2]
+    L = nb * ps
+
+    def gather(pool):                       # (P, Hkv, ps, ...) -> (B, Hkv, L, ...)
+        g = pool[block_tables]              # (B, nb, Hkv, ps, ...)
+        return jnp.moveaxis(g, 2, 1).reshape((B, Hkv, L) + pool.shape[3:])
+
+    kpos = kpos_pool[block_tables].reshape(B, L)
+    return decode_attention_ref(
+        q, gather(k_pool), gather(v_pool), kpos, cur, window=window,
+        scale=scale,
+        k_scale=None if k_scale is None else gather(k_scale),
+        v_scale=None if v_scale is None else gather(v_scale))
+
+
 def decode_attention_ref(q, k, v, kpos, cur, *, window: int = 0,
                          scale: float = 0.0, k_scale=None, v_scale=None):
     B, Hq, D = q.shape

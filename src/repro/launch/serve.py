@@ -36,6 +36,10 @@ def main():
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=12)
     ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV-cache pool engines (block tables, "
+                         "per-tenant page budgets, COW prefix sharing)")
+    ap.add_argument("--page-size", type=int, default=16)
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -51,7 +55,8 @@ def main():
     n_devices = args.devices or max(1, -(-total_slots // MAX_SLOTS))
     hv = Hypervisor(ClusterSpec(n_nodes=1, devices_per_node=n_devices))
     fleet = GatewayFleet(hv, model, params, n_slots=args.slots,
-                         max_len=args.max_len)
+                         max_len=args.max_len, paged=args.paged,
+                         page_size=args.page_size)
     tenants = [f"tenant-{i}" for i in range(args.tenants)]
     for i, t in enumerate(tenants):
         sess = fleet.open_session(t, slots=2 if i == 0 else 1)
@@ -85,6 +90,10 @@ def main():
     print(f"\n{len(reqs)} requests, {total} tokens, {wall:.2f}s wall "
           f"({total/wall:.1f} tok/s), median latency "
           f"{np.median(lat)*1e3:.0f} ms")
+    if args.paged:
+        for dev, fs in sorted(fleet.fleet_stats().items()):
+            if "pages" in fs:
+                print(f"  {dev} pages: {fs['pages']}")
     for t, s in sorted(fleet.stats().items()):
         print(f"  {t}: {s['served']} served on {s['slice']} "
               f"({s['device']}), {s['tokens_out']} tokens, "

@@ -281,6 +281,81 @@ def fill_kv_cache(cache, k, v, positions):
     return out
 
 
+def init_paged_kv_pool(n_pages: int, page_size: int, opts: AttnOpts, dtype,
+                       quant: bool = False):
+    """Paged KV pool: one shared page set instead of per-sequence rows.
+    Page 0 is reserved by the engine as the null/scratch page — unused
+    block-table entries point at it, and inactive batch rows write their
+    (discarded) k/v there with pos -1, so gathers through any table never
+    see a valid-looking stale position."""
+    shp = (n_pages, page_size, opts.n_kv_heads, opts.head_dim)
+    pool = {
+        "k": jnp.zeros(shp, jnp.int8 if quant else dtype),
+        "v": jnp.zeros(shp, jnp.int8 if quant else dtype),
+        "pos": jnp.full((n_pages, page_size), -1, jnp.int32),
+    }
+    if quant:
+        pool["k_scale"] = jnp.ones(shp[:3], jnp.float32)
+        pool["v_scale"] = jnp.ones(shp[:3], jnp.float32)
+    return pool
+
+
+def attn_decode_paged(p, x, positions, cache, block_tables, opts: AttnOpts):
+    """Paged-cache decode step. x (B,1,d); positions (B,1) absolute with -1
+    for inactive batch rows; cache leaves (P, ps, kv, hd) / pos (P, ps);
+    block_tables (B, nb) int32 page ids (0 pads unused entries).
+
+    The new k/v lands at page ``block_tables[b, pos // ps]`` offset
+    ``pos % ps`` — the engine guarantees that page is privately owned
+    (copy-on-write happens host-side before a shared page is written)."""
+    B = x.shape[0]
+    ps = cache["k"].shape[1]
+    q, k, v = _qkv(p, x, positions, opts)        # k/v (B,1,kv,hd)
+    quant = "k_scale" in cache
+    pos = positions[:, 0]
+    active = pos >= 0
+    safe = jnp.maximum(pos, 0)
+    pid = jnp.take_along_axis(block_tables, (safe // ps)[:, None],
+                              axis=1)[:, 0]                      # (B,)
+    # inactive rows write the reserved scratch page with pos -1
+    pid = jnp.where(active, pid, 0)
+    off = jnp.where(active, safe % ps, 0)
+    new = dict(cache)
+    if quant:
+        kq, ks = _quant_rows(k[:, 0])
+        vq, vs = _quant_rows(v[:, 0])
+        new["k"] = cache["k"].at[pid, off].set(kq)
+        new["v"] = cache["v"].at[pid, off].set(vq)
+        new["k_scale"] = cache["k_scale"].at[pid, off].set(ks)
+        new["v_scale"] = cache["v_scale"].at[pid, off].set(vs)
+    else:
+        new["k"] = cache["k"].at[pid, off].set(k[:, 0])
+        new["v"] = cache["v"].at[pid, off].set(v[:, 0])
+    new["pos"] = cache["pos"].at[pid, off].set(jnp.where(active, pos, -1))
+    cache = new
+    # gather this batch's pages into the (B, L, kv, hd) view the score
+    # einsum expects (L = nb * ps). The Pallas paged kernel
+    # (kernels/decode_attention.py) sweeps a pool in place on TPU but
+    # consumes the (P, Hkv, ps, D) layout — wiring it in here requires
+    # transposing this pool's (P, ps, kv, hd) leaves (axes 1<->2)
+    if quant:
+        k_all = _deq(cache["k"][block_tables],
+                     cache["k_scale"][block_tables], x.dtype)
+        v_all = _deq(cache["v"][block_tables],
+                     cache["v_scale"][block_tables], x.dtype)
+    else:
+        k_all = cache["k"][block_tables]         # (B, nb, ps, kv, hd)
+        v_all = cache["v"][block_tables]
+    k_all = k_all.reshape((B, -1) + k_all.shape[3:])
+    v_all = v_all.reshape((B, -1) + v_all.shape[3:])
+    kpos = cache["pos"][block_tables].reshape(B, -1)
+    mask = _causal_mask(positions, kpos, opts.window, opts.causal,
+                        k_valid=kpos >= 0)
+    y = _attend(q, k_all, v_all, mask, opts)
+    out = jnp.einsum("bshgk,hgkd->bsd", y, p["wo"].astype(x.dtype))
+    return out, cache
+
+
 def attn_decode(p, x, positions, cache, opts: AttnOpts, update_cache=True):
     """x (B,1,d); positions (B,1) absolute. Returns (y, cache').
 

@@ -45,23 +45,38 @@ class Model:
         return lm.lm_logits(self.cfg, params, hidden)
 
     # ---------------- serving ----------------
-    def prefill(self, params, batch, max_len: int):
+    def prefill(self, params, batch, max_len: int, clamp_window: bool = True):
         cfg = self.cfg
         if cfg.family == "audio":
             return encdec.encdec_prefill(cfg, params, batch["frames"],
                                          batch["tokens"])
         return lm.lm_prefill(cfg, params, batch["tokens"], max_len,
-                             patches=batch.get("patches"))
+                             patches=batch.get("patches"),
+                             clamp_window=clamp_window)
 
     def decode(self, params, caches, tokens, pos):
         if self.cfg.family == "audio":
             return encdec.encdec_decode(self.cfg, params, caches, tokens, pos)
         return lm.lm_decode(self.cfg, params, caches, tokens, pos)
 
+    def decode_paged(self, params, caches, tokens, pos, block_tables):
+        """One decode step against the paged KV pool (block-table
+        indirection; attention-family LMs only)."""
+        if self.cfg.family == "audio":
+            raise ValueError("paged decode supports decoder-only LMs")
+        return lm.lm_decode_paged(self.cfg, params, caches, tokens, pos,
+                                  block_tables)
+
     def make_caches(self, batch: int, max_len: int):
         if self.cfg.family == "audio":
             return encdec.make_encdec_caches(self.cfg, batch, max_len)
         return lm.make_decode_caches(self.cfg, batch, max_len)
+
+    def make_paged_caches(self, n_pages: int, page_size: int):
+        """Empty paged KV pool (see ``models.stages.init_paged_cache``)."""
+        if self.cfg.family == "audio":
+            raise ValueError("paged caches support decoder-only LMs")
+        return lm.make_paged_caches(self.cfg, n_pages, page_size)
 
 
 def get_model(cfg: ModelConfig) -> Model:

@@ -21,8 +21,8 @@ import jax.numpy as jnp
 from repro.configs.base import MIXER_SHARED_ATTN, ModelConfig
 from repro.layers.embeddings import embed, init_embedding
 from repro.layers.norms import rms_norm, softcap
-from repro.models.stages import (apply_stages, init_cache, init_shared_block,
-                                 init_stage, plan_stages)
+from repro.models.stages import (apply_stages, init_cache, init_paged_cache,
+                                 init_shared_block, init_stage, plan_stages)
 
 
 def _dtype(cfg: ModelConfig):
@@ -80,12 +80,17 @@ def lm_logits(cfg: ModelConfig, params, h):
     return softcap(out, cfg.final_softcap)
 
 
-def lm_prefill(cfg: ModelConfig, params, tokens, max_len: int, patches=None):
-    """Run the prompt, building decode caches sized ``max_len``."""
+def lm_prefill(cfg: ModelConfig, params, tokens, max_len: int, patches=None,
+               clamp_window: bool = True):
+    """Run the prompt, building decode caches sized ``max_len``.
+
+    ``clamp_window=False`` builds full-length (non-ring) caches even for
+    windowed sites — the layout the paged page-splice expects."""
     x = _embed_tokens(cfg, params, tokens, patches)
     pos = _positions(x)
     x, caches, _ = apply_stages(cfg, params, x, pos, mode="prefill",
-                                max_len=max_len, cache_dtype=_dtype(cfg))
+                                max_len=max_len, cache_dtype=_dtype(cfg),
+                                clamp_window=clamp_window)
     h = rms_norm(x, params["final_norm"])
     return h, caches
 
@@ -100,6 +105,24 @@ def lm_decode(cfg: ModelConfig, params, caches, tokens, pos):
     return lm_logits(cfg, params, h), caches
 
 
+def lm_decode_paged(cfg: ModelConfig, params, caches, tokens, pos,
+                    block_tables):
+    """One decode step against the paged KV pool. tokens (B,1) int32;
+    pos (B,) absolute positions (-1 = inactive row); block_tables (B, nb)
+    int32 page ids."""
+    x = _embed_tokens(cfg, params, tokens)
+    positions = pos[:, None].astype(jnp.int32)
+    x, caches, _ = apply_stages(cfg, params, x, positions, mode="decode",
+                                caches=caches, block_tables=block_tables)
+    h = rms_norm(x, params["final_norm"])
+    return lm_logits(cfg, params, h), caches
+
+
 def make_decode_caches(cfg: ModelConfig, batch: int, max_len: int):
     """Empty caches (for dry-run input specs and serving allocation)."""
     return init_cache(cfg, batch, max_len, _dtype(cfg))
+
+
+def make_paged_caches(cfg: ModelConfig, n_pages: int, page_size: int):
+    """Empty paged KV pool (shared across every serving slot)."""
+    return init_paged_cache(cfg, n_pages, page_size, _dtype(cfg))

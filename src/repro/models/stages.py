@@ -20,9 +20,10 @@ import jax.numpy as jnp
 
 from repro.configs.base import (ATTN_GLOBAL, ATTN_LOCAL, MIXER_SHARED_ATTN,
                                 MIXER_SSM, ModelConfig)
-from repro.layers.attention import (AttnOpts, attn_decode, attn_forward,
-                                    fill_kv_cache, init_attention,
-                                    init_kv_cache)
+from repro.layers.attention import (AttnOpts, attn_decode, attn_decode_paged,
+                                    attn_forward, fill_kv_cache,
+                                    init_attention, init_kv_cache,
+                                    init_paged_kv_pool)
 from repro.layers.mla import (MLAOpts, fill_mla_cache, init_mla,
                               init_mla_cache, mla_decode, mla_forward)
 from repro.layers.mlp import init_mlp, mlp_forward
@@ -234,14 +235,44 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype):
     return tuple(out)
 
 
+def init_paged_cache(cfg: ModelConfig, n_pages: int, page_size: int, dtype):
+    """Empty paged KV pool pytree mirroring the stage structure: every
+    attention site gets (n_pages, page_size, kv, hd) pool tensors instead
+    of per-sequence (batch, L) rows. One logical page allocates the same
+    physical row in every layer's pool, so a single block table per
+    sequence addresses the whole stack. Windowed sites share the layout
+    (the decode mask enforces the window); SSM/MLA archs have no paged
+    form."""
+    if cfg.ssm is not None or cfg.mla is not None:
+        raise ValueError("paged KV caches support attention-family models "
+                         "(SSM state and MLA latents are not paged)")
+
+    def stacked(site, n):
+        one = init_paged_kv_pool(n_pages, page_size, attn_opts(cfg, site),
+                                 dtype, quant=cfg.kv_quant)
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (n,) + a.shape).copy(), one)
+
+    out = []
+    for st in plan_stages(cfg):
+        if st.kind == "run":
+            out.append(stacked(st.sites[0], st.repeats))
+        else:
+            out.append(tuple(stacked(s, st.repeats) for s in st.sites))
+    return tuple(out)
+
+
 # ---------------------------------------------------------------------------
 # Site application
 # ---------------------------------------------------------------------------
 
-def _apply_site_full(cfg, site, p, shared, x, positions, mode, max_len, dtype):
+def _apply_site_full(cfg, site, p, shared, x, positions, mode, max_len, dtype,
+                     clamp_window: bool = True):
     """Full-sequence site application.
 
     mode: "train" (no cache) | "prefill" (returns filled cache).
+    ``clamp_window=False`` builds full-``max_len`` caches even for windowed
+    sites (no ring) — the layout the paged splice expects.
     Returns (x', cache_or_None, aux).
     """
     aux = jnp.zeros((), jnp.float32)
@@ -279,7 +310,7 @@ def _apply_site_full(cfg, site, p, shared, x, positions, mode, max_len, dtype):
 
     cache = None
     if mode == "prefill":
-        L = _site_cache_len(site, max_len)
+        L = _site_cache_len(site, max_len) if clamp_window else max_len
         if cfg.mla is not None:
             cache = fill_mla_cache(
                 init_mla_cache(x.shape[0], L, mla_opts(cfg), dtype),
@@ -290,6 +321,29 @@ def _apply_site_full(cfg, site, p, shared, x, positions, mode, max_len, dtype):
                               quant=cfg.kv_quant),
                 k, v, positions)
     return x, cache, aux
+
+
+def _apply_site_decode_paged(cfg, site, p, shared, x, positions, cache,
+                             block_tables):
+    """Decode one site against its paged pool (block-table indirection)."""
+    aux = jnp.zeros((), jnp.float32)
+    pp = shared if site.mixer == MIXER_SHARED_ATTN else p
+    h = rms_norm(x, pp["norm1"])
+    y, cache = attn_decode_paged(pp["attn"], h, positions, cache,
+                                 block_tables, attn_opts(cfg, site))
+    if cfg.post_norm:
+        y = rms_norm(y, p["norm1_post"])
+    x = x + y
+    h = rms_norm(x, pp["norm2"])
+    if site.mlp == "dense":
+        y = mlp_forward(pp["mlp"], h, cfg.act)
+    elif site.mlp == "moe":
+        y, aux = moe_forward(pp["moe"], h, moe_opts(cfg))
+    else:
+        y = jnp.zeros_like(x)
+    if cfg.post_norm:
+        y = rms_norm(y, p["norm2_post"])
+    return x + y, cache, aux
 
 
 def _apply_site_decode(cfg, site, p, shared, x, positions, cache):
@@ -361,10 +415,14 @@ def _gather_act(x):
 
 def apply_stages(cfg: ModelConfig, params, x, positions, *,
                  mode: str = "train", caches=None, max_len: int = 0,
-                 remat: bool = False, cache_dtype=None):
+                 remat: bool = False, cache_dtype=None, block_tables=None,
+                 clamp_window: bool = True):
     """Run all stages. mode: train | prefill | decode.
 
-    Returns (x, new_caches_or_None, aux_sum).
+    ``block_tables`` (B, nb) switches decode to the paged-pool path (caches
+    must come from ``init_paged_cache``). ``clamp_window=False`` makes
+    prefill build full-length caches for windowed sites (paged splice
+    layout). Returns (x, new_caches_or_None, aux_sum).
     """
     stages = plan_stages(cfg)
     shared = params.get("shared")
@@ -373,6 +431,12 @@ def apply_stages(cfg: ModelConfig, params, x, positions, *,
     new_caches = []
     # Megatron-SP constraints only make sense with a TP axis in play
     use_sp = remat and cfg.tp_mode == "tp"
+
+    def decode_site(site, p_i, c_i, xx):
+        if block_tables is not None:
+            return _apply_site_decode_paged(cfg, site, p_i, shared, xx,
+                                            positions, c_i, block_tables)
+        return _apply_site_decode(cfg, site, p_i, shared, xx, positions, c_i)
 
     for si, st in enumerate(stages):
         sp = params["stages"][si]
@@ -384,8 +448,7 @@ def apply_stages(cfg: ModelConfig, params, x, positions, *,
                 def body(carry, xs, site=site):
                     xx, aux = carry
                     p_i, c_i = xs
-                    xx, c_i, a = _apply_site_decode(cfg, site, p_i, shared,
-                                                    xx, positions, c_i)
+                    xx, c_i, a = decode_site(site, p_i, c_i, xx)
                     return (xx, aux + a), c_i
             else:
                 def body(carry, p_i, site=site):
@@ -394,7 +457,7 @@ def apply_stages(cfg: ModelConfig, params, x, positions, *,
                         xx = _gather_act(xx)
                     xx, c_i, a = _apply_site_full(cfg, site, p_i, shared, xx,
                                                   positions, mode, max_len,
-                                                  dtype)
+                                                  dtype, clamp_window)
                     if use_sp:
                         xx = _seq_shard(xx)
                     return (xx, aux + a), c_i
@@ -412,8 +475,7 @@ def apply_stages(cfg: ModelConfig, params, x, positions, *,
                     ps, cs = xs
                     outc = []
                     for site_i, (p_i, c_i) in zip(sites, zip(ps, cs)):
-                        xx, c_i, a = _apply_site_decode(
-                            cfg, site_i, p_i, shared, xx, positions, c_i)
+                        xx, c_i, a = decode_site(site_i, p_i, c_i, xx)
                         aux = aux + a
                         outc.append(c_i)
                     return (xx, aux), tuple(outc)
@@ -426,7 +488,7 @@ def apply_stages(cfg: ModelConfig, params, x, positions, *,
                     for site_i, p_i in zip(sites, ps):
                         xx, c_i, a = _apply_site_full(
                             cfg, site_i, p_i, shared, xx, positions, mode,
-                            max_len, dtype)
+                            max_len, dtype, clamp_window)
                         aux = aux + a
                         outc.append(c_i)
                     if use_sp:

@@ -68,6 +68,13 @@ class ServiceQuota:
     max_inflight_requests: int = 32      # concurrent serving requests
     max_prompt_tokens: int = 4096
     max_new_tokens: int = 1024
+    # KV-cache pool pages one tenant may hold on a paged engine (0 = no
+    # cap). Enforced at the engine's admission gate with
+    # queue-on-exhaustion semantics: a tenant at its ceiling has further
+    # requests wait in its queue instead of OOMing the shared pool — the
+    # memory-fabric analogue of the slot quota (per-tenant accounting of
+    # every shared resource, not just compute).
+    max_cache_pages_per_tenant: int = 0
 
 
 DEFAULT_QUOTAS: Dict[str, ServiceQuota] = {
@@ -77,7 +84,8 @@ DEFAULT_QUOTAS: Dict[str, ServiceQuota] = {
     # BAaaS is the shared serving pool: tight per-tenant ceilings so one
     # tenant cannot monopolize the provider's device
     "baas": ServiceQuota(max_slots_per_tenant=2, max_inflight_requests=16,
-                         max_prompt_tokens=2048, max_new_tokens=512),
+                         max_prompt_tokens=2048, max_new_tokens=512,
+                         max_cache_pages_per_tenant=256),
 }
 
 

@@ -1,8 +1,10 @@
 from repro.runtime.fleet import GatewayFleet
 from repro.runtime.gateway import ServingGateway, TenantSession
 from repro.runtime.losses import chunked_xent, full_xent
+from repro.runtime.paged import PagePoolManager
 from repro.runtime.serve import (BatchingEngine, Request, jit_serve_step,
-                                 make_prefill_step, make_serve_step)
+                                 make_paged_serve_step, make_prefill_step,
+                                 make_serve_step)
 from repro.runtime.sharding import (batch_specs, cache_specs, dp_axes, named,
                                     param_specs)
 from repro.runtime.train import (TrainOpts, init_train_state, jit_train_step,

@@ -35,7 +35,9 @@ from repro.core.hypervisor import Hypervisor
 from repro.models.api import Model
 from repro.runtime.gateway import (TenantSession, settle_finished_request,
                                    validate_submit)
-from repro.runtime.serve import BatchingEngine, Request, make_serve_step
+from repro.runtime.paged import default_pool_pages
+from repro.runtime.serve import (BatchingEngine, Request,
+                                 make_paged_serve_step, make_serve_step)
 
 
 class GatewayFleet:
@@ -48,19 +50,29 @@ class GatewayFleet:
     def __init__(self, hv: Hypervisor, model: Model, params,
                  n_slots: int = 4, max_len: int = 256,
                  eos_id: Optional[int] = None, migrate_every: int = 0,
-                 autoscale_every: int = 0, scale_up_queue_depth: int = 8):
+                 autoscale_every: int = 0, scale_up_queue_depth: int = 8,
+                 paged: bool = False, page_size: int = 16,
+                 cache_pages: Optional[int] = None,
+                 page_pressure: float = 0.85):
         # fail fast, before any session can allocate: lazy engine creation
         # must never be the first place this surfaces (it would strand an
         # admitted tenant and its vSlice)
         if model.cfg.ssm is not None:
             raise ValueError("GatewayFleet serves attention-family models; "
                              "use jit_serve_step for SSM archs")
+        if paged and model.cfg.mla is not None:
+            raise ValueError("paged KV caches support plain-attention "
+                             "models (MLA latents are not paged)")
         self.hv = hv
         self.model = model
         self.params = params
         self.n_slots = n_slots
         self.max_len = max_len
         self.eos_id = eos_id
+        self.paged = paged
+        self.page_size = page_size
+        self.cache_pages = cache_pages
+        self.page_pressure = page_pressure       # occupancy scale-out trigger
         self.migrate_every = migrate_every       # steps between sweeps
         self.autoscale_every = autoscale_every   # steps between autoscale
         self.scale_up_queue_depth = scale_up_queue_depth
@@ -79,20 +91,35 @@ class GatewayFleet:
         # Compile the decode step ONCE through the hypervisor's
         # reconfigurator (full configuration); every engine spun up after
         # that binds the same executable — a PR cache hit per device.
-        self._decode_fn = make_serve_step(model)
-        caches_avals = jax.eval_shape(lambda: model.make_caches(n_slots,
-                                                                max_len))
+        example = [params, None,
+                   jnp.zeros((n_slots, 1), jnp.int32),
+                   jnp.zeros((n_slots,), jnp.int32)]
+        if paged:
+            if max_len % page_size:
+                raise ValueError(f"max_len {max_len} must be a multiple of "
+                                 f"page_size {page_size}")
+            max_blocks = max_len // page_size
+            pages = cache_pages if cache_pages is not None \
+                else default_pool_pages(n_slots, max_blocks)
+            self._decode_fn = make_paged_serve_step(model)
+            example[1] = jax.eval_shape(
+                lambda: model.make_paged_caches(pages, page_size))
+            example.append(jnp.zeros((n_slots, max_blocks), jnp.int32))
+        else:
+            self._decode_fn = make_serve_step(model)
+            example[1] = jax.eval_shape(lambda: model.make_caches(n_slots,
+                                                                  max_len))
         self._example = jax.tree.map(
             lambda x: jax.ShapeDtypeStruct(jnp.shape(x), x.dtype),
-            (params, caches_avals,
-             jnp.zeros((n_slots, 1), jnp.int32),
-             jnp.zeros((n_slots,), jnp.int32)))
-        self._desc = f"serve:{model.cfg.name}:slots{n_slots}:len{max_len}"
+            tuple(example))
+        self._desc = f"serve:{model.cfg.name}:slots{n_slots}:len{max_len}" \
+            + (f":paged{page_size}" if paged else "")
         entry, dt, hit = hv.reconfig.partial_reconfigure(
             self._decode_fn, self._example, static_desc=self._desc)
         self.program_fingerprint = entry.fingerprint
         hv._log("fleet_up", model=model.cfg.name, n_slots=n_slots,
-                fingerprint=entry.fingerprint, compile_s=dt, cache_hit=hit)
+                fingerprint=entry.fingerprint, compile_s=dt, cache_hit=hit,
+                paged=paged)
         # register LAST: a constructor failure above must not leave a
         # dead fleet's listener on the shared hypervisor
         hv.migration_listeners.append(self._on_migration)
@@ -106,7 +133,9 @@ class GatewayFleet:
             return eng
         eng = BatchingEngine(self.model, self.params, n_slots=self.n_slots,
                              max_len=self.max_len, eos_id=self.eos_id,
-                             id_counter=self._req_ids)
+                             id_counter=self._req_ids, paged=self.paged,
+                             page_size=self.page_size,
+                             cache_pages=self.cache_pages)
         entry, dt, hit = self.hv.reconfig.partial_reconfigure(
             self._decode_fn, self._example, static_desc=self._desc)
         eng.use_program(entry.compiled)
@@ -126,6 +155,7 @@ class GatewayFleet:
         for dev, eng in list(self._engines.items()):
             if eng.idle() and not self.hv.db.device(dev).slices:
                 del self._engines[dev]
+                self.hv.monitor.clear_pages(dev)
                 parked.append(dev)
                 self.hv._log("engine_park", device=dev)
         return parked
@@ -139,17 +169,31 @@ class GatewayFleet:
     # ------------------------------------------------------------------
     # Tenant sessions
     # ------------------------------------------------------------------
+    def _session_page_grant(self, slots: int) -> int:
+        """A k-slot session's share of one engine's page pool (the vSlice
+        memory dimension)."""
+        if not self.paged:
+            return 0
+        pages = self.cache_pages if self.cache_pages is not None \
+            else default_pool_pages(self.n_slots,
+                                    self.max_len // self.page_size)
+        return max(1, (pages - 1) * slots // self.n_slots)
+
     def open_session(self, tenant: str, slots: int = 1,
                      service_model: str = "baas") -> TenantSession:
         if tenant in self._sessions:
             raise ValueError(f"tenant {tenant!r} already has a session")
-        vs = self.hv.open_serving_session(tenant, slots, service_model)
+        vs = self.hv.open_serving_session(
+            tenant, slots, service_model,
+            cache_pages=self._session_page_grant(slots))
         try:
             engine = self._ensure_engine(vs.device_id)
             # PR-swap the shared decode program onto this tenant's slice
             self.hv.program_slice(vs.slice_id, self._decode_fn,
                                   self._example, static_desc=self._desc)
             engine.set_tenant_share(tenant, slots)
+            if self.paged:
+                engine.set_tenant_pages(tenant, vs.cache_pages or None)
         except Exception:
             # undo the allocation + quota: a failed open must not strand
             # the tenant admitted against a slice it can never use
@@ -167,6 +211,7 @@ class GatewayFleet:
         if engine is not None:
             engine.cancel_queued(tenant)
             engine.set_tenant_share(tenant, None)
+            engine.set_tenant_pages(tenant, None)
         for _ in range(max(0, sess.submitted - sess.served)):
             self.hv.admission.finish_request(tenant, sess.service_model)
         self.hv.close_serving_session(sess.slice_id)
@@ -201,6 +246,14 @@ class GatewayFleet:
         req._session = sess
         return req
 
+    def cancel(self, req: Request) -> bool:
+        """Cancel one request on whichever engine holds it (queued or in
+        flight; an in-flight cancel frees the slot and its pool pages)."""
+        for eng in self._engines.values():
+            if eng.cancel(req):
+                return True
+        return False
+
     def step(self) -> int:
         """One decode step on EVERY active engine (devices run concurrently
         in hardware; ``last_round_ms`` records each device's wall time so
@@ -217,6 +270,9 @@ class GatewayFleet:
             if n:
                 self.last_round_ms[dev] = (time.monotonic() - t0) * 1e3
             total += n
+            if eng.paged:
+                self.hv.monitor.record_pages(dev, eng.pool.used_pages,
+                                             eng.pool.total_pages)
         self.steps += 1
         if self.migrate_every and self.steps % self.migrate_every == 0:
             self.rebalance()
@@ -224,11 +280,16 @@ class GatewayFleet:
             self.autoscale()
         return total
 
-    def run_until_idle(self, max_steps: int = 10000):
+    def run_until_idle(self, max_steps: int = 10000) -> bool:
+        """Returns True when every engine drained; False on a stall
+        (max_steps expired, or queued work that can make no progress)."""
         for _ in range(max_steps):
-            if self.step() == 0 and \
-                    all(e.idle() for e in self._engines.values()):
-                return
+            n = self.step()
+            if all(e.idle() for e in self._engines.values()):
+                return True
+            if n == 0:
+                return False
+        return all(e.idle() for e in self._engines.values())
 
     # ------------------------------------------------------------------
     # Telemetry -> control plane (same attribution as the single gateway,
@@ -253,8 +314,11 @@ class GatewayFleet:
     def _on_migration(self, old: str, new: str):
         """Hypervisor re-placed a slice: rebind the session AND move its
         traffic. Queued + in-flight requests are drained from the source
-        engine and resumed on the target's — generated tokens survive the
-        move (prompt-prefix replay into the target's KV cache)."""
+        engine and carried to the target. On a paged fleet an in-flight
+        request's pool pages are COPIED device-to-device (exported before
+        the drain frees them), so decode continues without recompute;
+        prompt-prefix replay remains the fallback whenever the target
+        cannot take the pages (slot/page exhaustion, dense engines)."""
         sess = next((s for s in self._sessions.values()
                      if s.slice_id == old), None)
         if sess is None:
@@ -269,15 +333,35 @@ class GatewayFleet:
         target = self._ensure_engine(new_dev)
         source = self._engines.get(old_dev)
         moved: List[Request] = []
+        payloads: Dict[int, object] = {}
         if source is not None:
+            # export pages BEFORE draining: released pages may be recycled
+            # by the source's next admission
+            if source.paged and target.paged:
+                for r in source.inflight(sess.tenant):
+                    p = source.export_request_pages(r)
+                    if p is not None:
+                        payloads[id(r)] = p
             moved = source.drain_tenant(sess.tenant)
             source.set_tenant_share(sess.tenant, None)
+            source.set_tenant_pages(sess.tenant, None)
         target.set_tenant_share(sess.tenant, sess.slots)
+        if target.paged:
+            vs = self.hv.db.find_slice(new)
+            target.set_tenant_pages(sess.tenant, vs.cache_pages or None)
+        page_copied = replayed = 0
         for r in moved:
-            target.resume(r)
+            payload = payloads.get(id(r))
+            if payload is not None and target.import_request_pages(r, payload):
+                page_copied += 1
+            else:
+                target.resume(r)
+                if id(r) in payloads:
+                    replayed += 1
         event = {"tenant": sess.tenant, "old": old, "new": new,
                  "old_device": old_dev, "new_device": new_dev,
-                 "moved_requests": len(moved)}
+                 "moved_requests": len(moved), "page_copied": page_copied,
+                 "replayed_inflight": replayed}
         self.handoffs.append(event)
         self.hv._log("handoff", **event)
 
@@ -294,11 +378,12 @@ class GatewayFleet:
                 for dev, e in self._engines.items()}
 
     def autoscale(self) -> Optional[str]:
-        """Scale out when the aggregate backlog outgrows the active fleet:
-        wake a PARKED device and move the deepest-queued tenant onto it
-        (the hand-off listener carries the traffic). Always parks empty
-        idle engines on the way out. Returns the woken device id, if any.
-        """
+        """Scale out when the aggregate backlog outgrows the active fleet
+        OR a device's KV page pool runs hot: wake a PARKED device and move
+        the deepest-queued (or page-hungriest) tenant onto it — the
+        hand-off listener carries the traffic (and pages). Always parks
+        empty idle engines on the way out. Returns the woken device id,
+        if any."""
         queued = self.queued_by_device()
         n_active = max(1, len(self._engines))
         woken = None
@@ -308,8 +393,31 @@ class GatewayFleet:
                 new = self.elastic.scale_out(self._sessions[tenant].slice_id)
                 if new is not None:
                     woken = new.device_id
+        if woken is None and self.paged:
+            # memory pressure is a scale-out signal of its own: a device
+            # can stall on pages with a near-empty queue (long contexts)
+            new = self.elastic.scale_out_on_page_pressure(
+                self._page_hungriest_slices(), self.page_pressure)
+            if new is not None:
+                woken = new.device_id
         self.park_idle_engines()
         return woken
+
+    def _page_hungriest_slices(self) -> Dict[str, str]:
+        """device_id -> slice_id of the tenant holding the most pool pages
+        there (the best candidate to move off a page-pressured device)."""
+        out: Dict[str, str] = {}
+        for dev, eng in self._engines.items():
+            if not eng.paged:
+                continue
+            by_tenant = eng.pool.pages_by_tenant()
+            for tenant in sorted(by_tenant, key=by_tenant.get,
+                                 reverse=True):
+                sess = self._sessions.get(tenant)
+                if sess is not None:
+                    out[dev] = sess.slice_id
+                    break
+        return out
 
     def _deepest_queued_tenant(self) -> Optional[str]:
         best, depth = None, 0
@@ -330,5 +438,6 @@ class GatewayFleet:
     def fleet_stats(self) -> dict:
         return {dev: {"active": sum(e.active_by_tenant().values()),
                       "queued": sum(e.queued_by_tenant().values()),
-                      "steps": e.steps}
+                      "steps": e.steps,
+                      **({"pages": e.page_stats()} if e.paged else {})}
                 for dev, e in self._engines.items()}

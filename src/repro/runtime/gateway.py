@@ -34,7 +34,8 @@ import jax.numpy as jnp
 from repro.core.hypervisor import Hypervisor
 from repro.models.api import Model
 from repro.rc2f.admission import AdmissionError
-from repro.runtime.serve import BatchingEngine, Request, make_serve_step
+from repro.runtime.serve import (BatchingEngine, Request,
+                                 make_paged_serve_step, make_serve_step)
 
 
 @dataclasses.dataclass
@@ -89,16 +90,25 @@ class ServingGateway:
 
     def __init__(self, hv: Hypervisor, model: Model, params,
                  n_slots: int = 4, max_len: int = 256,
-                 eos_id: Optional[int] = None, migrate_every: int = 0):
+                 eos_id: Optional[int] = None, migrate_every: int = 0,
+                 paged: bool = False, page_size: int = 16,
+                 cache_pages: Optional[int] = None):
         self.hv = hv
         self.model = model
+        self.paged = paged
         self.engine = BatchingEngine(model, params, n_slots=n_slots,
-                                     max_len=max_len, eos_id=eos_id)
+                                     max_len=max_len, eos_id=eos_id,
+                                     paged=paged, page_size=page_size,
+                                     cache_pages=cache_pages)
         self.engine.on_step = self._on_step
         self.engine.on_finish = self._on_finish
         self.migrate_every = migrate_every   # steps between straggler sweeps
         self._sessions: Dict[str, TenantSession] = {}
         self.migrations: List[Tuple[str, str]] = []
+        # the gateway owns ONE engine = one shared device; page occupancy
+        # is reported against the inventory's first device (the fleet
+        # reports per real device)
+        self._device_key = next(iter(hv.db.devices), "device-0")
         # rebind at the source: ANY migrate_stragglers() call (ours or an
         # external ops sweep) immediately repoints affected sessions
         hv.migration_listeners.append(self._on_migration)
@@ -106,36 +116,58 @@ class ServingGateway:
         # Compile the decode step THROUGH the hypervisor's reconfigurator:
         # the executable lands in the RC3E program cache (full configuration
         # once), and each tenant session PR-swaps it onto its own vSlice.
-        self._decode_fn = make_serve_step(model)
+        self._decode_fn = make_paged_serve_step(model) if paged \
+            else make_serve_step(model)
         # avals only: pinning the real params/cache arrays here would keep
         # a duplicate KV-cache set alive for the gateway's lifetime
+        example = [params, self.engine.caches,
+                   jnp.zeros((n_slots, 1), jnp.int32),
+                   jnp.zeros((n_slots,), jnp.int32)]
+        if paged:
+            example.append(jnp.zeros(self.engine.pool.block_tables.shape,
+                                     jnp.int32))
         self._example = jax.tree.map(
             lambda x: jax.ShapeDtypeStruct(jnp.shape(x), x.dtype),
-            (params, self.engine.caches,
-             jnp.zeros((n_slots, 1), jnp.int32),
-             jnp.zeros((n_slots,), jnp.int32)))
-        self._desc = f"serve:{model.cfg.name}:slots{n_slots}:len{max_len}"
+            tuple(example))
+        self._desc = f"serve:{model.cfg.name}:slots{n_slots}:len{max_len}" \
+            + (f":paged{page_size}" if paged else "")
         entry, dt, hit = hv.reconfig.partial_reconfigure(
             self._decode_fn, self._example, static_desc=self._desc)
         self.engine.use_program(entry.compiled)
         self.program_fingerprint = entry.fingerprint
         hv._log("gateway_up", model=model.cfg.name, n_slots=n_slots,
-                fingerprint=entry.fingerprint, compile_s=dt, cache_hit=hit)
+                fingerprint=entry.fingerprint, compile_s=dt, cache_hit=hit,
+                paged=paged)
 
     # ------------------------------------------------------------------
     # Tenant sessions
     # ------------------------------------------------------------------
+    def _session_page_grant(self, slots: int) -> int:
+        """A k-slot session's share of the engine's page pool (its vSlice
+        memory dimension): proportional to its compute share."""
+        if not self.paged:
+            return 0
+        return max(1, self.engine.pool.total_pages * slots
+                   // self.engine.n_slots)
+
     def open_session(self, tenant: str, slots: int = 1,
                      service_model: str = "baas") -> TenantSession:
         if tenant in self._sessions:
             raise ValueError(f"tenant {tenant!r} already has a session")
-        vs = self.hv.open_serving_session(tenant, slots, service_model)
+        vs = self.hv.open_serving_session(
+            tenant, slots, service_model,
+            cache_pages=self._session_page_grant(slots))
         # bind the shared decode program to this tenant's slice (PR swap —
         # a cache hit, microseconds; slice goes ALLOCATED -> CONFIGURED)
         self.hv.program_slice(vs.slice_id, self._decode_fn, self._example,
                               static_desc=self._desc)
         # slice-aware scheduling: a k-slot vSlice may hold k engine slots
         self.engine.set_tenant_share(tenant, slots)
+        if self.paged:
+            # memory-aware scheduling: the engine's admission gate queues
+            # the tenant once it holds its vSlice page grant (hv already
+            # clamped it to the service model's page quota)
+            self.engine.set_tenant_pages(tenant, vs.cache_pages or None)
         sess = TenantSession(tenant, vs.slice_id, slots, service_model)
         self._sessions[tenant] = sess
         return sess
@@ -148,6 +180,7 @@ class ServingGateway:
         for _ in range(max(0, sess.submitted - sess.served)):
             self.hv.admission.finish_request(tenant, sess.service_model)
         self.engine.set_tenant_share(tenant, None)
+        self.engine.set_tenant_pages(tenant, None)
         self.hv.close_serving_session(sess.slice_id)
 
     def close(self):
@@ -181,19 +214,35 @@ class ServingGateway:
         req._session = sess
         return req
 
+    def cancel(self, req: Request) -> bool:
+        """Cancel one request (queued or in flight — a timed-out client
+        must not burn a slot until max_new_tokens). The engine fires
+        ``on_finish``, so the quota settles like a completion."""
+        return self.engine.cancel(req)
+
     def step(self) -> int:
         """One shared decode step across all tenants; periodically sweeps
         for straggling (hot) tenants and rebinds migrated sessions."""
         n = self.engine.step()
+        if self.paged:
+            self.hv.monitor.record_pages(self._device_key,
+                                         self.engine.pool.used_pages,
+                                         self.engine.pool.total_pages)
         if self.migrate_every and self.engine.steps \
                 and self.engine.steps % self.migrate_every == 0:
             self.rebalance()
         return n
 
-    def run_until_idle(self, max_steps: int = 10000):
+    def run_until_idle(self, max_steps: int = 10000) -> bool:
+        """Returns True when fully drained; False on a stall (max_steps
+        expired, or queued work that can make no progress)."""
         for _ in range(max_steps):
-            if self.step() == 0 and self.engine.idle():
-                return
+            n = self.step()
+            if self.engine.idle():
+                return True
+            if n == 0:
+                return False
+        return self.engine.idle()
 
     # ------------------------------------------------------------------
     # Telemetry -> control plane
@@ -233,3 +282,6 @@ class ServingGateway:
                     "tokens_out": s.tokens_out,
                     "quota": self.hv.admission.usage(t)}
                 for t, s in self._sessions.items()}
+
+    def page_stats(self) -> dict:
+        return self.engine.page_stats()

@@ -1,0 +1,293 @@
+"""Host-side page accounting for the paged KV-cache pool.
+
+The device holds one shared page pool per layer (``models.stages.
+init_paged_cache``); this module owns everything the pool needs a host
+brain for: the free list, per-slot block tables, page refcounts,
+copy-on-write arbitration, the tenant-scoped prefix cache, and per-tenant
+page accounting (the enforcement point for the vSlice/admission
+``max_cache_pages_per_tenant`` quota).
+
+Page 0 is reserved as the null/scratch page: unused block-table entries
+point at it and inactive batch rows write their discarded k/v there with
+pos -1, so a gather through any block table never sees a valid-looking
+stale position.
+
+Prefix sharing is content-addressed and strictly intra-tenant: block j of
+a context is keyed by the hash chain over its token values (seeded with
+the tenant), so two concurrent requests of one tenant with a common
+prompt prefix share physical pages by refcount. A partially filled tail
+page is shared on an exact-content match and copy-on-written the moment a
+branch writes into it; registrations die with their pages (sharing is
+among temporally overlapping requests — there is no retained cache to
+evict).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Hashable, List, Optional, Tuple
+
+import numpy as np
+
+
+class NoPagesError(RuntimeError):
+    """Internal guard: the engine must pre-check ``pages_needed`` /
+    ``free_pages`` before allocating, so user traffic queues instead of
+    ever seeing this."""
+
+
+def default_pool_pages(n_slots: int, max_blocks: int) -> int:
+    """Default pool size: dense-equivalent capacity (one full-length row
+    per slot) plus the reserved null page. The single source for every
+    layer that sizes or grants against the default pool (engine, fleet)."""
+    return n_slots * max_blocks + 1
+
+
+@dataclasses.dataclass
+class AdmitPlan:
+    """What the engine must still do after pages were assigned to a slot."""
+    blocks: List[int]          # full page-id list for the slot's block table
+    write_start: int           # first block index this request must write
+    skip_prefill: bool         # every written position was prefix-shared
+    matched_pages: int         # pages reused from the prefix cache
+
+    @property
+    def write_pages(self) -> List[int]:
+        return self.blocks[self.write_start:]
+
+
+class PagePoolManager:
+    """Free list + block tables + refcounts + prefix cache for one engine."""
+
+    def __init__(self, n_pages: int, page_size: int, n_slots: int,
+                 max_blocks: int):
+        if n_pages < 2:
+            raise ValueError("pool needs >= 2 pages (page 0 is reserved)")
+        self.n_pages = n_pages
+        self.page_size = page_size
+        self.max_blocks = max_blocks
+        # LIFO free list: recently freed pages are re-used first (their
+        # content is hottest in any cache hierarchy)
+        self._free: List[int] = list(range(n_pages - 1, 0, -1))
+        self._ref = np.zeros((n_pages,), np.int32)
+        self._ref[0] = 1                       # null page: never allocated
+        self._owner: Dict[int, str] = {}       # page -> charging tenant
+        self._tenant_pages: Dict[str, int] = {}
+        self.block_tables = np.zeros((n_slots, max_blocks), np.int32)
+        self._slot_pages: List[List[int]] = [[] for _ in range(n_slots)]
+        self._prefix: Dict[Hashable, int] = {}       # content key -> page
+        self._page_key: Dict[int, Hashable] = {}     # page -> its key
+        self.prefix_hits = 0
+        self.cow_copies = 0
+
+    # ---------------- occupancy ----------------
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def total_pages(self) -> int:
+        """Allocatable pages (page 0 excluded)."""
+        return self.n_pages - 1
+
+    @property
+    def used_pages(self) -> int:
+        return self.total_pages - len(self._free)
+
+    @property
+    def occupancy(self) -> float:
+        return self.used_pages / max(1, self.total_pages)
+
+    def tenant_pages(self, tenant: str) -> int:
+        return self._tenant_pages.get(tenant, 0)
+
+    def pages_by_tenant(self) -> Dict[str, int]:
+        return {t: n for t, n in self._tenant_pages.items() if n}
+
+    def slot_blocks(self, slot: int) -> List[int]:
+        return self._slot_pages[slot]
+
+    # ---------------- page lifecycle ----------------
+    def _alloc_one(self, tenant: str) -> int:
+        if not self._free:
+            raise NoPagesError("page pool exhausted")
+        pid = self._free.pop()
+        self._ref[pid] = 1
+        self._owner[pid] = tenant
+        self._tenant_pages[tenant] = self._tenant_pages.get(tenant, 0) + 1
+        return pid
+
+    def _decref(self, pid: int):
+        self._ref[pid] -= 1
+        if self._ref[pid] == 0:
+            key = self._page_key.pop(pid, None)
+            if key is not None:
+                self._prefix.pop(key, None)
+            tenant = self._owner.pop(pid)
+            self._tenant_pages[tenant] -= 1
+            if not self._tenant_pages[tenant]:
+                del self._tenant_pages[tenant]
+            self._free.append(pid)
+
+    def _register(self, key: Hashable, pid: int):
+        # first writer wins; identical content by construction
+        if key not in self._prefix and pid not in self._page_key:
+            self._prefix[key] = pid
+            self._page_key[pid] = key
+
+    # ---------------- prefix matching ----------------
+    def _block_keys(self, tenant: str, toks) -> List[Hashable]:
+        """Hash chain over full, content-complete blocks of a context.
+        Block j is content-complete once prefill has written all of its
+        positions, i.e. (j+1)*ps <= len(toks) - 1 (position len-1 is
+        written by the first decode step, not prefill)."""
+        ps = self.page_size
+        full = (len(toks) - 1) // ps
+        keys, h = [], hash(("kvpfx", tenant))
+        for j in range(full):
+            h = hash((h,) + tuple(int(t) for t in toks[j * ps:(j + 1) * ps]))
+            keys.append(h)
+        return keys
+
+    def _tail_key(self, tenant: str, toks) -> Optional[Hashable]:
+        """Exact-content key for the partially filled tail page (positions
+        full*ps .. len(toks)-2), or None when the tail is empty."""
+        ps = self.page_size
+        n = len(toks)
+        full = (n - 1) // ps
+        if (n - 1) % ps == 0:
+            return None
+        keys = self._block_keys(tenant, toks)
+        h = keys[-1] if keys else hash(("kvpfx", tenant))
+        return ("tail", h, tuple(int(t) for t in toks[full * ps:n - 1]))
+
+    def _match(self, tenant: str, toks) -> Tuple[List[int], int]:
+        """(shared page ids, total blocks) for a context, read-only."""
+        n = len(toks)
+        total = (n - 1) // self.page_size + 1
+        shared: List[int] = []
+        keys = self._block_keys(tenant, toks)
+        for key in keys:
+            pid = self._prefix.get(key)
+            if pid is None:
+                break
+            shared.append(pid)
+        if len(shared) == len(keys):
+            tkey = self._tail_key(tenant, toks)
+            if tkey is not None:
+                pid = self._prefix.get(tkey)
+                if pid is not None:
+                    shared.append(pid)
+        return shared, total
+
+    def pages_needed(self, tenant: str, toks, share: bool = True) -> int:
+        """Fresh pages a context would allocate at admission (read-only —
+        the engine's queue-on-exhaustion check)."""
+        if not share:
+            return (len(toks) - 1) // self.page_size + 1
+        shared, total = self._match(tenant, toks)
+        return total - len(shared)
+
+    # ---------------- slot admission / growth ----------------
+    def admit(self, slot: int, tenant: str, toks,
+              share: bool = True) -> AdmitPlan:
+        """Assign pages for context ``toks`` (prompt + generated so far,
+        including the token the first decode step consumes): prefix-matched
+        pages by refcount, the rest freshly allocated. Builds the slot's
+        block-table row and registers this context's content keys.
+        ``share=False`` (legacy prefill, which writes every position)
+        allocates everything fresh and registers nothing."""
+        n = len(toks)
+        total = (n - 1) // self.page_size + 1
+        if total > self.max_blocks:
+            raise ValueError(f"context of {n} tokens needs {total} blocks, "
+                             f"table has {self.max_blocks}")
+        shared = self._match(tenant, toks)[0] if share else []
+        for pid in shared:
+            self._ref[pid] += 1
+            self.prefix_hits += 1
+        fresh: List[int] = []
+        try:
+            for _ in range(total - len(shared)):
+                fresh.append(self._alloc_one(tenant))
+        except NoPagesError:
+            # roll back BOTH halves: pages allocated before the exhaustion
+            # point and the shared-page increfs
+            for pid in fresh:
+                self._decref(pid)
+            for pid in shared:
+                self._decref(pid)
+            raise
+        blocks = shared + fresh
+        self.block_tables[slot, :] = 0
+        self.block_tables[slot, :total] = blocks
+        self._slot_pages[slot] = list(blocks)
+        if share:
+            # register what this request will write: content-complete full
+            # blocks, plus its tail page (exact content) if it owns one
+            keys = self._block_keys(tenant, toks)
+            for j in range(len(shared), len(keys)):
+                self._register(keys[j], blocks[j])
+            full = len(keys)
+            if len(shared) <= full:  # tail page not among the shared ones
+                tkey = self._tail_key(tenant, toks)
+                if tkey is not None:
+                    self._register(tkey, blocks[full])
+        return AdmitPlan(blocks=blocks, write_start=len(shared),
+                         skip_prefill=len(shared) == total,
+                         matched_pages=len(shared))
+
+    def grow(self, slot: int, tenant: str) -> int:
+        """Append one fresh page to a slot (decode crossed a page
+        boundary). Caller pre-checks ``free_pages`` and tenant budget."""
+        pid = self._alloc_one(tenant)
+        bi = len(self._slot_pages[slot])
+        self.block_tables[slot, bi] = pid
+        self._slot_pages[slot].append(pid)
+        return pid
+
+    # ---------------- copy-on-write ----------------
+    def is_shared(self, slot: int, block: int) -> bool:
+        return self._ref[self._slot_pages[slot][block]] > 1
+
+    def cow(self, slot: int, block: int, tenant: str) -> Tuple[int, int]:
+        """Detach a shared page before this slot writes it: allocate a
+        private copy target and repoint the block table. Returns
+        (src, dst); the engine performs the actual device copy."""
+        src = self._slot_pages[slot][block]
+        dst = self._alloc_one(tenant)
+        self._ref[src] -= 1          # still > 0: another slot holds it
+        self._slot_pages[slot][block] = dst
+        self.block_tables[slot, block] = dst
+        self.cow_copies += 1
+        return src, dst
+
+    def touch_write(self, slot: int, block: int):
+        """A privately held page is about to be mutated: retire its tail
+        registration (its content will no longer match the key). Full-block
+        registrations are immutable — decode never writes into a
+        content-complete block."""
+        pid = self._slot_pages[slot][block]
+        key = self._page_key.get(pid)
+        if key is not None and isinstance(key, tuple) and key[0] == "tail":
+            del self._page_key[pid]
+            self._prefix.pop(key, None)
+
+    # ---------------- release ----------------
+    def release_slot(self, slot: int):
+        for pid in self._slot_pages[slot]:
+            self._decref(pid)
+        self._slot_pages[slot] = []
+        self.block_tables[slot, :] = 0
+
+    # ---------------- introspection ----------------
+    def stats(self) -> dict:
+        return {
+            "page_size": self.page_size,
+            "pages_total": self.total_pages,
+            "pages_used": self.used_pages,
+            "pages_free": self.free_pages,
+            "occupancy": round(self.occupancy, 4),
+            "by_tenant": self.pages_by_tenant(),
+            "prefix_hits": self.prefix_hits,
+            "cow_copies": self.cow_copies,
+        }

@@ -6,13 +6,13 @@ lowers for decode_32k / long_500k cells.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import functools
 import itertools
-import queue
 import threading
 import time
-from typing import Any, Callable, Dict, Iterator, List, Optional
+from typing import Any, Callable, Deque, Dict, Iterator, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -21,6 +21,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
 from repro.models.api import Model
+from repro.runtime.paged import PagePoolManager, default_pool_pages
 from repro.runtime.sharding import (batch_specs, cache_specs, dp_axes, named,
                                     param_specs)
 
@@ -34,9 +35,19 @@ def make_serve_step(model: Model):
     return serve_step
 
 
-def make_prefill_step(model: Model, max_len: int):
+def make_paged_serve_step(model: Model):
+    """serve_step over the paged pool: extra (B, nb) block-table operand."""
+
+    def serve_step(params, caches, tokens, pos, block_tables):
+        return model.decode_paged(params, caches, tokens, pos, block_tables)
+
+    return serve_step
+
+
+def make_prefill_step(model: Model, max_len: int, clamp_window: bool = True):
     def prefill_step(params, batch):
-        return model.prefill(params, batch, max_len)
+        return model.prefill(params, batch, max_len,
+                             clamp_window=clamp_window)
     return prefill_step
 
 
@@ -68,18 +79,20 @@ def jit_serve_step(model: Model, mesh: Mesh, batch: int, cache_len: int,
 # ---------------------------------------------------------------------------
 
 @functools.lru_cache(maxsize=8)
-def _prefill_jit(model: Model, max_len: int):
-    """One jitted prefill per (model, max_len), shared across engines —
-    a fleet spinning an engine up on a freshly woken device must not pay a
-    new trace/compile mid-hand-off. (Model is a frozen dataclass of config
-    only, so the cache key is cheap and value-equal across engines.)
+def _prefill_jit(model: Model, max_len: int, full_len: bool = False):
+    """One jitted prefill per (model, max_len, layout), shared across
+    engines — a fleet spinning an engine up on a freshly woken device must
+    not pay a new trace/compile mid-hand-off. (Model is a frozen dataclass
+    of config only, so the cache key is cheap and value-equal across
+    engines.) ``full_len`` builds non-ring full-length caches for windowed
+    sites — the layout the paged page-splice consumes.
 
     Bounded: the engine is hypervisor-independent, so prefill programs
     live in this small LRU rather than the RC3E ProgramCache the gateway/
     fleet route the decode program through; 8 (model, max_len) pairs cover
     any realistic co-resident serving mix without pinning executables for
     every config a long-lived process ever touched."""
-    step = make_prefill_step(model, max_len)
+    step = make_prefill_step(model, max_len, clamp_window=not full_len)
     return jax.jit(lambda p, toks: step(p, {"tokens": toks}))
 
 
@@ -90,6 +103,40 @@ def _splice_slot(full, one, slot):
     donation every admission would copy the entire fleet of KV buffers."""
     return jax.tree.map(
         lambda f, o: f.at[:, slot].set(o[:, 0].astype(f.dtype)), full, one)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,), static_argnames=("start",))
+def _splice_pages(pool, one, pages, start: int):
+    """Scatter a batch-1 full-length prefill cache into pool pages: block
+    ``start + i`` of the context lands in page ``pages[i]``. Pool leaves
+    are (L, P, ps, ...), prefill leaves (L, 1, max_len, ...); the pool tree
+    is donated (only the touched pages change)."""
+    nb = pages.shape[0]
+
+    def put(pl_leaf, d_leaf):
+        ps = pl_leaf.shape[2]
+        seg = jax.lax.dynamic_slice_in_dim(d_leaf[:, 0], start * ps, nb * ps,
+                                           axis=1)
+        seg = seg.reshape((d_leaf.shape[0], nb, ps) + d_leaf.shape[3:])
+        return pl_leaf.at[:, pages].set(seg.astype(pl_leaf.dtype))
+
+    return jax.tree.map(put, pool, one)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _copy_page(pool, src, dst):
+    """Copy-on-write detach: duplicate page ``src`` into ``dst`` across
+    every layer's pool (leaves are (L, P, ps, ...); axis 1 is the page)."""
+    return jax.tree.map(lambda a: a.at[:, dst].set(a[:, src]), pool)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _import_pages(pool, payload, pages):
+    """Scatter a migrated request's page payload (leaves (L, nb, ps, ...))
+    into freshly allocated pages of this engine's pool."""
+    return jax.tree.map(
+        lambda pl_leaf, seg: pl_leaf.at[:, pages].set(
+            seg.astype(pl_leaf.dtype)), pool, payload)
 
 
 @dataclasses.dataclass
@@ -103,6 +150,7 @@ class Request:
     submitted_at: float = dataclasses.field(default_factory=time.monotonic)
     first_token_at: Optional[float] = None
     finished_at: Optional[float] = None
+    finish_reason: Optional[str] = None   # "eos" | "length" | "cancelled"
 
 
 class BatchingEngine:
@@ -115,6 +163,19 @@ class BatchingEngine:
     its vSlice size by the serving gateway) caps how many engine slots it
     may occupy at once — slice-aware scheduling on a shared device.
 
+    Two cache layouts:
+
+    * dense (default): per-slot (n_slots, max_len) KV rows, capacity fixed
+      at construction;
+    * ``paged=True``: one shared page pool (``cache_pages`` pages of
+      ``page_size`` positions) virtualized across slots by block tables.
+      Admission allocates pages (and *defers* — queues — when the pool or
+      the tenant's page budget is exhausted, instead of OOMing), slots
+      grow page-by-page as decoding proceeds, and requests of one tenant
+      with a common prompt prefix share refcounted pages copy-on-write.
+      A slot that cannot grow is preempted back to the queue head (its
+      generated tokens survive via prompt-prefix replay).
+
     Greedy decoding (argmax) — deterministic, testable.
     """
 
@@ -125,7 +186,9 @@ class BatchingEngine:
     def __init__(self, model: Model, params, n_slots: int = 4,
                  max_len: int = 256, eos_id: Optional[int] = None,
                  prefill_mode: str = "batched",
-                 id_counter: Optional[Iterator[int]] = None):
+                 id_counter: Optional[Iterator[int]] = None,
+                 paged: bool = False, page_size: int = 16,
+                 cache_pages: Optional[int] = None):
         # Slot recycling relies on position-masked KV caches (stale entries
         # carry positions > current and are masked out). SSM state has no
         # such masking, so the engine serves attention-family models; SSM
@@ -141,29 +204,58 @@ class BatchingEngine:
         self.max_len = max_len
         self.eos_id = eos_id
         self.prefill_mode = prefill_mode
-        self._queues: "Dict[str, queue.Queue[Request]]" = {}
+        self.paged = paged
+        self._queues: "Dict[str, Deque[Request]]" = {}
+        self._qlock = threading.Lock()
         self._tenant_share: Dict[str, int] = {}      # max concurrent slots
+        self._tenant_pages: Dict[str, int] = {}      # max pool pages held
         self._rr_offset = 0                          # round-robin cursor
         # request ids: a fleet passes one shared counter to every engine so
         # ids stay unique across devices (the hypervisor audit log and a
         # live hand-off both key on them)
         self._ids = id_counter if id_counter is not None \
             else itertools.count()
-        self.caches = model.make_caches(n_slots, max_len)
         self._slots: List[Optional[Request]] = [None] * n_slots
-        self._pos = np.zeros((n_slots,), np.int32)
-        self._decode = jax.jit(
-            lambda p, c, t, pos: model.decode(p, c, t, pos))
-        # batched slot prefill: model.prefill over the prompt, spliced into
-        # this slot's row of the shared caches. Padding a prefill past the
-        # shortest layer cache (a local-attention window) would evict real
-        # in-window history, so pad buckets are clamped to it.
-        self._prefill = _prefill_jit(model, max_len)
-        self._splice = _splice_slot
-        lens = [l.shape[2] for l in jax.tree.leaves(self.caches)
-                if getattr(l, "ndim", 0) >= 3]
-        self._min_cache_len = min(lens) if lens else max_len
         self.steps = 0
+        self.preemptions = 0
+        if paged:
+            if model.cfg.mla is not None:
+                raise ValueError("paged KV caches support plain-attention "
+                                 "models (MLA latents are not paged)")
+            if max_len % page_size:
+                raise ValueError(f"max_len {max_len} must be a multiple of "
+                                 f"page_size {page_size}")
+            self.page_size = page_size
+            max_blocks = max_len // page_size
+            if cache_pages is None:
+                cache_pages = default_pool_pages(n_slots, max_blocks)
+            self.cache_pages = cache_pages
+            self.pool = PagePoolManager(cache_pages, page_size, n_slots,
+                                        max_blocks)
+            self.caches = model.make_paged_caches(cache_pages, page_size)
+            self._pos = np.full((n_slots,), -1, np.int32)
+            step = make_paged_serve_step(model)
+            self._decode = jax.jit(step)
+            self._prefill = _prefill_jit(model, max_len, full_len=True)
+            self._min_cache_len = max_len      # full-length pools, no ring
+        else:
+            self.page_size = 0
+            self.cache_pages = 0
+            self.pool = None
+            self.caches = model.make_caches(n_slots, max_len)
+            self._pos = np.zeros((n_slots,), np.int32)
+            self._decode = jax.jit(
+                lambda p, c, t, pos: model.decode(p, c, t, pos))
+            # batched slot prefill: model.prefill over the prompt, spliced
+            # into this slot's row of the shared caches. Padding a prefill
+            # past the shortest layer cache (a local-attention window)
+            # would evict real in-window history, so pad buckets are
+            # clamped to it.
+            self._prefill = _prefill_jit(model, max_len)
+            lens = [l.shape[2] for l in jax.tree.leaves(self.caches)
+                    if getattr(l, "ndim", 0) >= 3]
+            self._min_cache_len = min(lens) if lens else max_len
+        self._splice = _splice_slot
         # hooks for the serving gateway: called after every decode step /
         # on every request completion
         self.on_step: Optional[Callable[[Dict[str, int], float], None]] = None
@@ -183,58 +275,129 @@ class BatchingEngine:
         else:
             self._tenant_share[tenant] = max(1, int(max_slots))
 
+    def set_tenant_pages(self, tenant: str,
+                         max_pages: Optional[int]) -> None:
+        """Cap a tenant's pool pages (paged mode; None removes the cap).
+        The gateway/fleet set this from the tenant's vSlice ``cache_pages``
+        grant and the service model's ``max_cache_pages_per_tenant`` quota;
+        a tenant at its cap queues instead of allocating (no OOM)."""
+        if max_pages is None:
+            self._tenant_pages.pop(tenant, None)
+        else:
+            self._tenant_pages[tenant] = max(1, int(max_pages))
+
     def submit(self, prompt, max_new_tokens: int = 16,
                tenant: str = "default") -> Request:
         prompt = np.asarray(prompt, np.int32)
         if prompt.size == 0:
             raise ValueError("empty prompt: a request needs at least one "
                              "prompt token to seed decoding")
+        if self.paged:
+            worst = (len(prompt) + max_new_tokens - 1) // self.page_size + 1
+            if worst > self.pool.max_blocks:
+                raise ValueError(
+                    f"request may need {worst} blocks, block table has "
+                    f"{self.pool.max_blocks} (max_len {self.max_len}) — "
+                    "it could never be admitted")
+            if worst > self.pool.total_pages:
+                raise ValueError(
+                    f"request may need {worst} pages, pool has only "
+                    f"{self.pool.total_pages} — it could never be admitted")
         req = Request(next(self._ids), prompt, max_new_tokens, tenant=tenant)
-        self._queues.setdefault(tenant, queue.Queue()).put(req)
+        with self._qlock:
+            self._queues.setdefault(tenant,
+                                    collections.deque()).append(req)
         return req
 
-    def resume(self, req: Request) -> Request:
-        """Requeue a request drained from another engine (live migration):
-        its already-generated tokens are preserved and replayed as a prompt
-        prefix when the request is re-admitted (see ``_admit``)."""
-        self._queues.setdefault(req.tenant, queue.Queue()).put(req)
+    def resume(self, req: Request, front: bool = False) -> Request:
+        """Requeue a request drained from another engine (live migration)
+        or preempted locally: its already-generated tokens are preserved
+        and replayed as a prompt prefix when the request is re-admitted
+        (see ``_admit``). ``front`` preserves FIFO order for preemption."""
+        with self._qlock:
+            q = self._queues.setdefault(req.tenant, collections.deque())
+            if front:
+                q.appendleft(req)
+            else:
+                q.append(req)
         return req
 
     # ---------------- tenant bookkeeping ----------------
     def _drain_queue(self, tenant: str) -> List[Request]:
         """Remove and return all of a tenant's queued requests."""
-        q = self._queues.pop(tenant, None)
-        drained: List[Request] = []
-        while q is not None:
-            try:
-                drained.append(q.get_nowait())
-            except queue.Empty:
-                break
-        return drained
+        with self._qlock:
+            q = self._queues.pop(tenant, None)
+        return list(q) if q is not None else []
 
     def cancel_queued(self, tenant: str) -> List[Request]:
         """Drop a tenant's not-yet-admitted requests (e.g. its serving
         session closed). Returns the cancelled requests, marked done."""
         dropped = self._drain_queue(tenant)
         for r in dropped:
+            r.finish_reason = "cancelled"
             r.finished_at = time.monotonic()
             r.done.set()
         return dropped
 
+    def cancel(self, req: Request) -> bool:
+        """Cancel ONE request wherever it is: still queued (dropped from
+        its tenant queue) or in flight (its slot — and, in paged mode, its
+        pool pages — are freed immediately instead of burning until
+        ``max_new_tokens``). Fires ``on_finish`` so the gateway settles the
+        quota. Returns False when the request already finished."""
+        if req.done.is_set():
+            return False
+        dequeued = False
+        with self._qlock:
+            q = self._queues.get(req.tenant)
+            if q is not None and req in q:
+                q.remove(req)
+                if not q:
+                    del self._queues[req.tenant]
+                dequeued = True
+        if dequeued:
+            self._finish(req, "cancelled")
+            return True
+        for i, r in enumerate(self._slots):
+            if r is req:
+                self._release_slot(i)
+                self._finish(req, "cancelled")
+                return True
+        return False
+
+    def _finish(self, req: Request, reason: str):
+        req.finish_reason = reason
+        req.finished_at = time.monotonic()
+        req.done.set()
+        if self.on_finish is not None:
+            self.on_finish(req)
+
+    def _release_slot(self, slot: int):
+        """Free a slot (and its pool pages) without touching the request."""
+        self._slots[slot] = None
+        self._pos[slot] = -1 if self.paged else 0
+        if self.paged:
+            self.pool.release_slot(slot)
+
     def drain_tenant(self, tenant: str) -> List[Request]:
         """Evict a tenant's in-flight and queued requests for live hand-off
         to another engine. In-flight requests keep their generated tokens
-        (``resume`` on the target replays them as a prompt prefix); nothing
+        (``resume`` on the target replays them as a prompt prefix; a paged
+        fleet copies their pages instead — export BEFORE draining); nothing
         is marked done. Freed slots' stale cache rows stay position-masked
         until recycled. Returns the requests, in-flight first."""
         moved: List[Request] = []
         for i, r in enumerate(self._slots):
             if r is not None and r.tenant == tenant:
-                self._slots[i] = None
-                self._pos[i] = 0
+                self._release_slot(i)
                 moved.append(r)
         moved.extend(self._drain_queue(tenant))
         return moved
+
+    def inflight(self, tenant: Optional[str] = None) -> List[Request]:
+        """Requests currently holding a slot (optionally one tenant's)."""
+        return [r for r in self._slots
+                if r is not None and (tenant is None or r.tenant == tenant)]
 
     def active_by_tenant(self) -> Dict[str, int]:
         counts: Dict[str, int] = {}
@@ -244,28 +407,63 @@ class BatchingEngine:
         return counts
 
     def queued_by_tenant(self) -> Dict[str, int]:
-        return {t: q.qsize() for t, q in self._queues.items()}
+        """Queue depth per tenant. Tenant keys live only while a queue is
+        non-empty (emptied queues are pruned at pop/drain time), so tenant
+        churn cannot grow this map — or the admission round-robin —
+        unboundedly."""
+        with self._qlock:
+            return {t: len(q) for t, q in self._queues.items() if q}
+
+    def _ctx_tokens(self, req: Request) -> np.ndarray:
+        """Prompt + already-generated tokens: the context a (re-)admission
+        must cover (the final token seeds the next decode step)."""
+        if not req.out_tokens:
+            return req.prompt
+        return np.concatenate(
+            [req.prompt, np.asarray(req.out_tokens, np.int32)])
+
+    def _page_budget_ok(self, tenant: str, extra: int) -> bool:
+        budget = self._tenant_pages.get(tenant)
+        return budget is None or \
+            self.pool.tenant_pages(tenant) + extra <= budget
+
+    def _can_admit(self, req: Request) -> bool:
+        """Paged admission gate: queue-on-exhaustion. A request stays at
+        its tenant's queue head until the pool has pages for it AND the
+        tenant is under its page budget."""
+        if not self.paged:
+            return True
+        needed = self.pool.pages_needed(
+            req.tenant, self._ctx_tokens(req),
+            share=self.prefill_mode == "batched")
+        return needed <= self.pool.free_pages and \
+            self._page_budget_ok(req.tenant, needed)
 
     def _pop_next_request(self) -> Optional[Request]:
         """Round-robin over tenants: next queued request from a tenant with
-        spare share, starting after the last admitted tenant."""
-        tenants = list(self._queues.keys())
-        if not tenants:
+        spare share (and, in paged mode, an admissible head request),
+        starting after the last admitted tenant. Emptied queues are pruned
+        here so long-gone tenants don't linger in the rotation."""
+        with self._qlock:
+            tenants = [t for t, q in self._queues.items() if q]
+            if not tenants:
+                return None
+            active = self.active_by_tenant()
+            n = len(tenants)
+            for k in range(n):
+                t = tenants[(self._rr_offset + k) % n]
+                share = self._tenant_share.get(t, self.n_slots)
+                if active.get(t, 0) >= share:
+                    continue
+                req = self._queues[t][0]
+                if not self._can_admit(req):
+                    continue        # per-tenant FIFO: head blocks the rest
+                self._queues[t].popleft()
+                if not self._queues[t]:
+                    del self._queues[t]
+                self._rr_offset = (self._rr_offset + k + 1) % n
+                return req
             return None
-        active = self.active_by_tenant()
-        n = len(tenants)
-        for k in range(n):
-            t = tenants[(self._rr_offset + k) % n]
-            share = self._tenant_share.get(t, self.n_slots)
-            if active.get(t, 0) >= share:
-                continue
-            try:
-                req = self._queues[t].get_nowait()
-            except queue.Empty:
-                continue
-            self._rr_offset = (self._rr_offset + k + 1) % n
-            return req
-        return None
 
     # ---------------- engine loop ----------------
     def _admit(self):
@@ -278,19 +476,38 @@ class BatchingEngine:
             self._slots[slot] = req
             # a request resumed after live migration replays prompt +
             # already-generated tokens so decode continues where it left off
-            toks = req.prompt if not req.out_tokens else np.concatenate(
-                [req.prompt, np.asarray(req.out_tokens, np.int32)])
-            ctx = toks[:-1]
+            toks = self._ctx_tokens(req)
+            if self.paged:
+                self._admit_paged(slot, req, toks)
+            else:
+                ctx = toks[:-1]
+                if len(ctx) >= self.PREFILL_MIN_TOKENS \
+                        and self.prefill_mode == "batched":
+                    self._prefill_slot(slot, ctx)
+                else:
+                    # short context (or legacy mode): feed tokens through
+                    # the already-compiled decode program, slot-isolated
+                    for i, t in enumerate(ctx):
+                        self._step_single(slot, int(t), i)
+                self._pos[slot] = len(toks) - 1
+            req._next_input = int(toks[-1])
+
+    def _admit_paged(self, slot: int, req: Request, toks: np.ndarray):
+        """Page-granular admission: prefix-matched pages are adopted by
+        refcount; only the unshared suffix blocks are prefilled + spliced.
+        Legacy prefill steps every context token through the decode program
+        (writes at every position), so it must not adopt shared pages."""
+        plan = self.pool.admit(slot, req.tenant, toks,
+                               share=self.prefill_mode == "batched")
+        ctx = toks[:-1]
+        if not plan.skip_prefill:
             if len(ctx) >= self.PREFILL_MIN_TOKENS \
                     and self.prefill_mode == "batched":
-                self._prefill_slot(slot, ctx)
+                self._prefill_slot_paged(slot, ctx, plan)
             else:
-                # short context (or legacy mode): feed tokens through the
-                # already-compiled decode program, slot-isolated
                 for i, t in enumerate(ctx):
                     self._step_single(slot, int(t), i)
-            self._pos[slot] = len(toks) - 1
-            req._next_input = int(toks[-1])
+        self._pos[slot] = len(toks) - 1
 
     def _prefill_slot(self, slot: int, ctx: np.ndarray):
         """Prefill a slot's context with ONE batched call instead of one
@@ -299,6 +516,20 @@ class BatchingEngine:
         bound recompiles; padded positions carry pos >= len(ctx), so they
         are causally masked during decode and overwritten in place when
         generation reaches them."""
+        _, slot_caches = self._prefill(self.params,
+                                       self._pad_ctx(ctx))
+        self.caches = self._splice(self.caches, slot_caches, slot)
+
+    def _prefill_slot_paged(self, slot: int, ctx: np.ndarray, plan):
+        """Prefill, then scatter ONLY the unshared suffix blocks into this
+        slot's pool pages (shared prefix pages already hold identical
+        content — that's the point of sharing them)."""
+        _, slot_caches = self._prefill(self.params, self._pad_ctx(ctx))
+        pages = jnp.asarray(np.asarray(plan.write_pages, np.int32))
+        self.caches = _splice_pages(self.caches, slot_caches, pages,
+                                    start=plan.write_start)
+
+    def _pad_ctx(self, ctx: np.ndarray):
         n = len(ctx)
         bucket = 8
         while bucket < n:
@@ -306,23 +537,69 @@ class BatchingEngine:
         pad = max(n, min(bucket, self._min_cache_len))
         toks = np.zeros((1, pad), np.int32)
         toks[0, :n] = ctx
-        _, slot_caches = self._prefill(self.params, jnp.asarray(toks))
-        self.caches = self._splice(self.caches, slot_caches, slot)
+        return jnp.asarray(toks)
 
     def _step_single(self, slot: int, token: int, pos: int):
         tokens = np.zeros((self.n_slots, 1), np.int32)
         tokens[slot, 0] = token
-        posv = self._pos.copy()
-        posv[slot] = pos
-        logits, self.caches = self._decode(
-            self.params, self.caches, jnp.asarray(tokens),
-            jnp.asarray(posv))
+        if self.paged:
+            # other rows stay inactive (-1): their k/v writes land in the
+            # null page instead of garbling a possibly-shared write page
+            posv = np.full((self.n_slots,), -1, np.int32)
+            posv[slot] = pos
+            logits, self.caches = self._decode(
+                self.params, self.caches, jnp.asarray(tokens),
+                jnp.asarray(posv), jnp.asarray(self.pool.block_tables))
+        else:
+            posv = self._pos.copy()
+            posv[slot] = pos
+            logits, self.caches = self._decode(
+                self.params, self.caches, jnp.asarray(tokens),
+                jnp.asarray(posv))
         return np.asarray(logits)
+
+    def _prepare_writes(self):
+        """Before a paged decode step: every active slot's write position
+        must land in a privately owned page. Crossing a page boundary
+        grows the slot by one page; a shared (prefix) page is detached
+        copy-on-write; exhaustion preempts the slot back to its queue head
+        (generated tokens survive via prefix replay)."""
+        ps = self.page_size
+        for i, req in enumerate(self._slots):
+            if req is None:
+                continue
+            wpos = int(self._pos[i])
+            block = wpos // ps
+            if block >= len(self.pool.slot_blocks(i)):
+                if self.pool.free_pages >= 1 and \
+                        self._page_budget_ok(req.tenant, 1):
+                    self.pool.grow(i, req.tenant)
+                else:
+                    self._preempt(i)
+                continue
+            if self.pool.is_shared(i, block):
+                if self.pool.free_pages >= 1 and \
+                        self._page_budget_ok(req.tenant, 1):
+                    src, dst = self.pool.cow(i, block, req.tenant)
+                    self.caches = _copy_page(self.caches, jnp.int32(src),
+                                             jnp.int32(dst))
+                else:
+                    self._preempt(i)
+                continue
+            self.pool.touch_write(i, block)
+
+    def _preempt(self, slot: int):
+        req = self._slots[slot]
+        self._release_slot(slot)
+        self.resume(req, front=True)
+        self.preemptions += 1
 
     def step(self) -> int:
         """One engine iteration: admit + one decode step for active slots.
         Returns number of active slots."""
         self._admit()
+        if self.paged:
+            self._prepare_writes()
         active = [i for i, r in enumerate(self._slots) if r is not None]
         if not active:
             return 0
@@ -330,9 +607,15 @@ class BatchingEngine:
         for i in active:
             tokens[i, 0] = self._slots[i]._next_input
         t0 = time.monotonic()
-        logits, self.caches = self._decode(
-            self.params, self.caches, jnp.asarray(tokens),
-            jnp.asarray(self._pos))
+        if self.paged:
+            logits, self.caches = self._decode(
+                self.params, self.caches, jnp.asarray(tokens),
+                jnp.asarray(self._pos),
+                jnp.asarray(self.pool.block_tables))
+        else:
+            logits, self.caches = self._decode(
+                self.params, self.caches, jnp.asarray(tokens),
+                jnp.asarray(self._pos))
         logits = np.asarray(logits)
         step_ms = (time.monotonic() - t0) * 1e3
         self.steps += 1
@@ -349,20 +632,75 @@ class BatchingEngine:
             eos = self.eos_id is not None and nxt == self.eos_id
             if len(req.out_tokens) >= req.max_new_tokens or eos \
                     or self._pos[i] >= self.max_len - 1:
-                req.finished_at = time.monotonic()
-                req.done.set()
-                self._slots[i] = None
-                self._pos[i] = 0
-                if self.on_finish is not None:
-                    self.on_finish(req)
+                self._release_slot(i)
+                self._finish(req, "eos" if eos else "length")
         return len(active)
 
     def idle(self) -> bool:
-        return all(r is None for r in self._slots) and \
-            all(q.empty() for q in self._queues.values())
+        with self._qlock:
+            queued = any(self._queues.values())
+        return all(r is None for r in self._slots) and not queued
 
-    def run_until_idle(self, max_steps: int = 10000):
+    def run_until_idle(self, max_steps: int = 10000) -> bool:
+        """Run until no work remains. Returns True when fully drained,
+        False when ``max_steps`` expired with work still pending OR queued
+        work can make no progress (e.g. page-budget starvation with
+        nothing in flight) — callers must not mistake a stall for
+        completion."""
         for _ in range(max_steps):
-            if self.step() == 0 and \
-                    all(q.empty() for q in self._queues.values()):
-                return
+            n = self.step()
+            if self.idle():
+                return True
+            if n == 0:
+                return False        # nothing active, nothing admittable
+        return self.idle()
+
+    # ---------------- paged introspection / hand-off ----------------
+    def page_stats(self) -> dict:
+        """Pool occupancy for the monitor (empty dict in dense mode)."""
+        if not self.paged:
+            return {}
+        s = self.pool.stats()
+        s["preemptions"] = self.preemptions
+        return s
+
+    def export_request_pages(self, req: Request):
+        """Gather an in-flight request's pool pages to host memory for a
+        live hand-off (leaves (L, nb, ps, ...)). Call BEFORE draining —
+        released pages may be recycled by the next admission. Returns None
+        when the request holds no slot or the engine is dense."""
+        if not self.paged:
+            return None
+        for i, r in enumerate(self._slots):
+            if r is req:
+                pages = self.pool.slot_blocks(i)
+                if not pages:
+                    return None
+                idx = np.asarray(pages, np.int32)
+                return jax.tree.map(lambda a: np.asarray(a[:, idx]),
+                                    self.caches)
+        return None
+
+    def import_request_pages(self, req: Request, payload) -> bool:
+        """Adopt a migrated request by copying its pages into this pool —
+        decode continues WITHOUT prefix replay. Returns False (caller
+        falls back to replay) when no slot, pages or budget are free."""
+        if not self.paged:
+            return False
+        slot = next((i for i, r in enumerate(self._slots) if r is None),
+                    None)
+        if slot is None:
+            return False
+        nb = jax.tree.leaves(payload)[0].shape[1]
+        if nb > self.pool.free_pages or \
+                not self._page_budget_ok(req.tenant, nb):
+            return False
+        pages = [self.pool.grow(slot, req.tenant) for _ in range(nb)]
+        self.caches = _import_pages(
+            self.caches, jax.tree.map(jnp.asarray, payload),
+            jnp.asarray(np.asarray(pages, np.int32)))
+        toks = self._ctx_tokens(req)
+        self._slots[slot] = req
+        self._pos[slot] = len(toks) - 1
+        req._next_input = int(toks[-1])
+        return True

@@ -123,6 +123,89 @@ def test_ssd_kernel_matches_layer_path():
         atol=5e-4, rtol=5e-3)
 
 
+def _scatter_to_pool(k, v, kpos, n_pages, page_size, seed=0):
+    """Chop a dense (B, Hkv, L, D) cache into shuffled pool pages + block
+    tables (page 0 left empty — the engine's reserved null page)."""
+    B, Hkv, L, D = k.shape
+    nb = L // page_size
+    rng = np.random.default_rng(seed)
+    pages = rng.permutation(np.arange(1, n_pages))[:B * nb] \
+        .reshape(B, nb).astype(np.int32)
+    k_pool = jnp.zeros((n_pages, Hkv, page_size, D), k.dtype)
+    v_pool = jnp.zeros((n_pages, Hkv, page_size, D), v.dtype)
+    kpos_pool = jnp.full((n_pages, page_size), -1, jnp.int32)
+    for b in range(B):
+        for j in range(nb):
+            pid = int(pages[b, j])
+            sl = slice(j * page_size, (j + 1) * page_size)
+            k_pool = k_pool.at[pid].set(k[b, :, sl])
+            v_pool = v_pool.at[pid].set(v[b, :, sl])
+            kpos_pool = kpos_pool.at[pid].set(kpos[b, sl])
+    return k_pool, v_pool, kpos_pool, jnp.asarray(pages)
+
+
+@pytest.mark.parametrize("hq,hkv", [(8, 2), (4, 4)])
+@pytest.mark.parametrize("window", [0, 128])
+def test_paged_decode_attention(hq, hkv, window):
+    """Block-table-indirect kernel == paged ref == dense ref on the same
+    logical cache scattered across a shuffled page pool."""
+    B, D, ps, nb = 2, 64, 64, 8
+    L = nb * ps
+    q = jax.random.normal(KEY, (B, hq, D), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, hkv, L, D), jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, hkv, L, D), jnp.float32)
+    kpos = jnp.broadcast_to(jnp.arange(L)[None], (B, L))
+    kpos = jnp.where(kpos < L - 70, kpos, -1)    # partially filled cache
+    cur = jnp.array([L - 100, L // 3])
+    k_pool, v_pool, kpos_pool, bt = _scatter_to_pool(k, v, kpos, 2 * B * nb,
+                                                     ps)
+    dense = ops.decode_attention(q, k, v, kpos, cur, window=window,
+                                 force="ref")
+    ref = ops.paged_decode_attention(q, k_pool, v_pool, kpos_pool, bt, cur,
+                                     window=window, force="ref")
+    kern = ops.paged_decode_attention(q, k_pool, v_pool, kpos_pool, bt, cur,
+                                      window=window, force="interpret")
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(dense),
+                               atol=2e-5, rtol=2e-4)
+    np.testing.assert_allclose(np.asarray(kern), np.asarray(ref),
+                               atol=2e-5, rtol=2e-4)
+
+
+def test_paged_decode_attention_int8_pool():
+    """int8 page pool: kernel == paged ref, bounded noise vs fp32 dense."""
+    B, Hq, Hkv, D, ps, nb = 2, 8, 2, 64, 32, 8
+    L = nb * ps
+    q = jax.random.normal(KEY, (B, Hq, D))
+    kf = jax.random.normal(jax.random.PRNGKey(5), (B, Hkv, L, D))
+    vf = jax.random.normal(jax.random.PRNGKey(6), (B, Hkv, L, D))
+
+    def quant(x):
+        amax = jnp.max(jnp.abs(x), axis=-1)
+        s = jnp.where(amax > 0, amax / 127.0, 1.0)
+        return (jnp.clip(jnp.round(x / s[..., None]), -127, 127)
+                .astype(jnp.int8), s)
+
+    k8, ks = quant(kf)
+    v8, vs = quant(vf)
+    kpos = jnp.broadcast_to(jnp.arange(L)[None], (B, L))
+    cur = jnp.array([200, 77])
+    k_pool, v_pool, kpos_pool, bt = _scatter_to_pool(k8, v8, kpos, 2 * B * nb,
+                                                     ps)
+    ks_pool, vs_pool, _, _ = _scatter_to_pool(ks[..., None], vs[..., None],
+                                              kpos, 2 * B * nb, ps)
+    ks_pool, vs_pool = ks_pool[..., 0], vs_pool[..., 0]
+    o8 = ops.paged_decode_attention(q, k_pool, v_pool, kpos_pool, bt, cur,
+                                    k_scale=ks_pool, v_scale=vs_pool,
+                                    force="interpret")
+    r8 = ops.paged_decode_attention(q, k_pool, v_pool, kpos_pool, bt, cur,
+                                    k_scale=ks_pool, v_scale=vs_pool,
+                                    force="ref")
+    full = ops.decode_attention(q, kf, vf, kpos, cur, force="ref")
+    np.testing.assert_allclose(np.asarray(o8), np.asarray(r8),
+                               atol=2e-5, rtol=2e-4)
+    assert float(jnp.abs(r8 - full).max()) < 0.01   # quantization noise
+
+
 def test_decode_attention_int8_cache():
     """int8-quantized KV cache path: kernel == ref, bounded quant noise."""
     B, Hq, Hkv, D, L = 2, 8, 2, 64, 1024

@@ -1,0 +1,346 @@
+"""Paged KV-cache pool tests: pool-manager accounting, paged-vs-dense
+engine equivalence, COW prefix sharing, page-quota queue-on-exhaustion,
+page-copy hand-off, monitor occupancy — plus the engine lifecycle
+satellites (queue pruning, not-drained signal, in-flight cancel)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core import ClusterSpec, Hypervisor
+from repro.models import get_model
+from repro.runtime import BatchingEngine, GatewayFleet, ServingGateway
+from repro.runtime.paged import PagePoolManager
+
+
+@pytest.fixture(scope="module")
+def served_model():
+    cfg = reduced(get_config("smollm-135m")).replace(dtype="float32")
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _prompt(cfg, n, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, cfg.vocab_size, size=n).tolist()
+
+
+# ---------------------------------------------------------------------------
+# PagePoolManager (pure host control plane)
+# ---------------------------------------------------------------------------
+
+def test_pool_alloc_free_refcount():
+    pool = PagePoolManager(n_pages=9, page_size=4, n_slots=2, max_blocks=8)
+    assert pool.total_pages == 8 and pool.free_pages == 8
+    plan = pool.admit(0, "a", list(range(10)))       # 3 blocks (pos 0..9)
+    assert len(plan.blocks) == 3 and plan.write_start == 0
+    assert pool.used_pages == 3 and pool.tenant_pages("a") == 3
+    assert list(pool.block_tables[0][:3]) == plan.blocks
+    pool.release_slot(0)
+    assert pool.used_pages == 0 and pool.tenant_pages("a") == 0
+    assert pool.block_tables[0].sum() == 0
+
+
+def test_pool_prefix_share_and_cow():
+    pool = PagePoolManager(n_pages=17, page_size=4, n_slots=3, max_blocks=8)
+    toks = list(range(11))                           # 2 full blocks + tail
+    a = pool.admit(0, "t", toks)
+    b = pool.admit(1, "t", toks)
+    # b shares a's 2 full blocks AND the exact-content tail page
+    assert b.matched_pages == 3 and b.skip_prefill
+    assert b.blocks == a.blocks
+    assert pool.used_pages == 3                      # one physical copy
+    # write into the shared tail forces a COW detach for the writer
+    assert pool.is_shared(0, 2)
+    src, dst = pool.cow(0, 2, "t")
+    assert src == a.blocks[2] and dst != src
+    assert not pool.is_shared(0, 2) and pool.cow_copies == 1
+    # a context differing only in its FINAL token still shares the tail:
+    # position n-1 is written by decode, not prefill, so written content
+    # is identical
+    c = pool.admit(2, "t", toks[:-1] + [99])
+    assert c.matched_pages == 3 and c.skip_prefill
+    # ...but a context differing at a WRITTEN tail position shares only
+    # the full blocks
+    pool.release_slot(2)
+    d = pool.admit(2, "t", toks[:-2] + [99, 10])
+    assert d.matched_pages == 2 and not d.skip_prefill
+    assert d.blocks[:2] == a.blocks[:2] and d.blocks[2] not in (src, dst)
+
+
+def test_pool_sharing_is_tenant_scoped():
+    pool = PagePoolManager(n_pages=17, page_size=4, n_slots=2, max_blocks=8)
+    toks = list(range(9))
+    a = pool.admit(0, "alice", toks)
+    b = pool.admit(1, "bob", toks)
+    assert b.matched_pages == 0
+    assert not set(a.blocks) & set(b.blocks)
+    assert pool.tenant_pages("alice") == 3 and pool.tenant_pages("bob") == 3
+
+
+def test_pool_admit_exhaustion_rolls_back_cleanly():
+    """admit() hitting NoPagesError mid-allocation must free the pages it
+    already popped (and undo shared increfs) — no silent pool shrink."""
+    from repro.runtime.paged import NoPagesError
+    pool = PagePoolManager(n_pages=5, page_size=4, n_slots=2, max_blocks=8)
+    pool.admit(0, "t", list(range(7)))               # 2 of 4 pages
+    free_before = pool.free_pages
+    with pytest.raises(NoPagesError):
+        pool.admit(1, "u", list(range(10)))          # needs 3, only 2 free
+    assert pool.free_pages == free_before
+    assert pool.tenant_pages("u") == 0
+
+
+def test_pool_pages_needed_counts_sharing():
+    pool = PagePoolManager(n_pages=17, page_size=4, n_slots=2, max_blocks=8)
+    toks = list(range(11))
+    assert pool.pages_needed("t", toks) == 3
+    pool.admit(0, "t", toks)
+    assert pool.pages_needed("t", toks) == 0         # fully shareable now
+    assert pool.pages_needed("t", toks, share=False) == 3
+    assert pool.pages_needed("other", toks) == 3
+
+
+# ---------------------------------------------------------------------------
+# Paged engine == dense engine
+# ---------------------------------------------------------------------------
+
+def test_paged_engine_matches_dense(served_model):
+    """Same greedy tokens with the page pool as with dense per-slot rows —
+    prompt lengths straddle page boundaries (ps=16) and pad buckets."""
+    cfg, model, params = served_model
+    prompts = [_prompt(cfg, n, seed=n) for n in (2, 5, 15, 16, 17, 31, 33)]
+
+    def serve(**kw):
+        eng = BatchingEngine(model, params, n_slots=3, max_len=64, **kw)
+        reqs = [eng.submit(p, max_new_tokens=6) for p in prompts]
+        assert eng.run_until_idle() is True
+        assert all(r.finish_reason == "length" for r in reqs)
+        return [r.out_tokens for r in reqs]
+
+    assert serve() == serve(paged=True, page_size=16)
+
+
+def test_paged_engine_int8_pool_matches_dense_int8(served_model):
+    """kv_quant engines agree paged-vs-dense (int8 pools + scales page)."""
+    cfg, model, params = served_model
+    qcfg = cfg.replace(kv_quant=True)
+    qmodel = get_model(qcfg)
+    prompts = [_prompt(cfg, n, seed=100 + n) for n in (5, 17, 23)]
+
+    def serve(**kw):
+        eng = BatchingEngine(qmodel, params, n_slots=2, max_len=64, **kw)
+        reqs = [eng.submit(p, max_new_tokens=5) for p in prompts]
+        assert eng.run_until_idle() is True
+        return [r.out_tokens for r in reqs]
+
+    assert serve() == serve(paged=True, page_size=16)
+
+
+def test_cow_branches_decode_independently(served_model):
+    """Two branches share prompt pages; after one finishes, the survivor
+    keeps decoding correct tokens (COW detached its tail page)."""
+    cfg, model, params = served_model
+    prompt = _prompt(cfg, 34, seed=7)      # 2 full blocks + 1-token tail
+
+    eng = BatchingEngine(model, params, n_slots=2, max_len=64, paged=True,
+                        page_size=16)
+    short = eng.submit(prompt, max_new_tokens=2, tenant="t")
+    long = eng.submit(prompt, max_new_tokens=8, tenant="t")
+    assert eng.run_until_idle() is True
+    assert eng.pool.stats()["prefix_hits"] >= 3      # 2 full + tail shared
+    assert eng.pool.stats()["cow_copies"] >= 1
+
+    solo = BatchingEngine(model, params, n_slots=1, max_len=64)
+    ref = solo.submit(prompt, max_new_tokens=8)
+    solo.run_until_idle()
+    assert long.out_tokens == ref.out_tokens
+    assert short.out_tokens == ref.out_tokens[:2]
+    # all pages returned once both branches finished
+    assert eng.pool.used_pages == 0
+
+
+def test_page_exhaustion_queues_not_oom(served_model):
+    """A pool smaller than the offered load defers admissions (and preempts
+    when growth fails) instead of erroring — every request completes."""
+    cfg, model, params = served_model
+    eng = BatchingEngine(model, params, n_slots=4, max_len=64, paged=True,
+                        page_size=16, cache_pages=5)      # 4 usable pages
+    reqs = [eng.submit(_prompt(cfg, 20, seed=i), max_new_tokens=20)
+            for i in range(4)]
+    assert eng.run_until_idle(max_steps=5000) is True
+    assert all(len(r.out_tokens) == 20 for r in reqs)
+    assert all(r.finish_reason == "length" for r in reqs)
+
+
+def test_tenant_page_budget_queues(served_model):
+    """A tenant at its page budget queues while another tenant's requests
+    flow — per-tenant accounting of the shared memory fabric."""
+    cfg, model, params = served_model
+    eng = BatchingEngine(model, params, n_slots=4, max_len=64, paged=True,
+                        page_size=16, cache_pages=17)
+    eng.set_tenant_pages("greedy", 2)
+    g1 = eng.submit(_prompt(cfg, 20, seed=1), max_new_tokens=4,
+                    tenant="greedy")     # needs 2 pages: fills the budget
+    g2 = eng.submit(_prompt(cfg, 20, seed=2), max_new_tokens=4,
+                    tenant="greedy")     # must wait for g1's pages
+    other = eng.submit(_prompt(cfg, 20, seed=3), max_new_tokens=4,
+                       tenant="other")
+    eng.step()
+    assert eng.active_by_tenant() == {"greedy": 1, "other": 1}
+    assert eng.queued_by_tenant() == {"greedy": 1}
+    assert eng.run_until_idle() is True
+    assert all(len(r.out_tokens) == 4 for r in (g1, g2, other))
+
+
+def test_submit_rejects_impossible_request(served_model):
+    cfg, model, params = served_model
+    eng = BatchingEngine(model, params, n_slots=2, max_len=64, paged=True,
+                        page_size=16, cache_pages=3)      # 2 usable pages
+    with pytest.raises(ValueError, match="never be admitted"):
+        eng.submit(_prompt(cfg, 40, seed=0), max_new_tokens=20)
+    # a big pool doesn't help when the BLOCK TABLE can't hold the context:
+    # this must reject at submit, not explode inside step() (regression)
+    eng2 = BatchingEngine(model, params, n_slots=2, max_len=64, paged=True,
+                         page_size=16, cache_pages=33)    # 32 usable pages
+    with pytest.raises(ValueError, match="blocks"):
+        eng2.submit(_prompt(cfg, 70, seed=0), max_new_tokens=4)
+    ok = eng2.submit(_prompt(cfg, 10, seed=1), max_new_tokens=4)
+    assert eng2.run_until_idle() is True
+    assert len(ok.out_tokens) == 4
+
+
+# ---------------------------------------------------------------------------
+# Engine lifecycle satellites
+# ---------------------------------------------------------------------------
+
+def test_run_until_idle_signals_stall(served_model):
+    """max_steps expiring with queued work returns False — a stall is not
+    silently mistaken for completion."""
+    cfg, model, params = served_model
+    eng = BatchingEngine(model, params, n_slots=2, max_len=64)
+    for i in range(3):
+        eng.submit(_prompt(cfg, 5, seed=i), max_new_tokens=8)
+    assert eng.run_until_idle(max_steps=2) is False
+    assert eng.run_until_idle() is True
+
+
+def test_cancel_in_flight_frees_slot_and_pages(served_model):
+    """cancel() releases an in-flight request's slot and pool pages
+    immediately (a timed-out client must not burn a slot until
+    max_new_tokens) and stamps finish_reason."""
+    cfg, model, params = served_model
+    eng = BatchingEngine(model, params, n_slots=2, max_len=64, paged=True,
+                        page_size=16)
+    victim = eng.submit(_prompt(cfg, 17, seed=0), max_new_tokens=40)
+    other = eng.submit(_prompt(cfg, 5, seed=1), max_new_tokens=4)
+    for _ in range(2):
+        eng.step()
+    assert victim in eng.inflight()
+    pages_before = eng.pool.used_pages
+    assert eng.cancel(victim) is True
+    assert victim.done.is_set() and victim.finish_reason == "cancelled"
+    assert victim not in eng.inflight()
+    assert eng.pool.used_pages < pages_before
+    assert eng.cancel(victim) is False               # already finished
+    assert eng.run_until_idle() is True
+    assert other.finish_reason == "length"
+
+
+def test_cancel_queued_request(served_model):
+    cfg, model, params = served_model
+    eng = BatchingEngine(model, params, n_slots=1, max_len=64)
+    first = eng.submit(_prompt(cfg, 5, seed=0), max_new_tokens=3)
+    queued = eng.submit(_prompt(cfg, 5, seed=1), max_new_tokens=3)
+    assert eng.cancel(queued) is True
+    assert queued.finish_reason == "cancelled" and not queued.out_tokens
+    assert eng.run_until_idle() is True
+    assert first.finish_reason == "length"
+    assert eng.queued_by_tenant() == {}              # pruned, not zeroed
+
+
+def test_finish_reason_eos(served_model):
+    cfg, model, params = served_model
+    eng = BatchingEngine(model, params, n_slots=1, max_len=64)
+    probe = eng.submit(_prompt(cfg, 6, seed=2), max_new_tokens=8)
+    eng.run_until_idle()
+    eos = probe.out_tokens[0]
+    eng2 = BatchingEngine(model, params, n_slots=1, max_len=64, eos_id=eos)
+    req = eng2.submit(_prompt(cfg, 6, seed=2), max_new_tokens=8)
+    eng2.run_until_idle()
+    assert req.finish_reason == "eos"
+    assert req.out_tokens == [eos]
+
+
+# ---------------------------------------------------------------------------
+# Control plane: gateway grants, monitor occupancy, fleet hand-off
+# ---------------------------------------------------------------------------
+
+def test_gateway_page_grants_and_monitor_occupancy(served_model):
+    cfg, model, params = served_model
+    hv = Hypervisor(ClusterSpec(n_nodes=1, devices_per_node=1,
+                                cache_pages_per_device=64))
+    gw = ServingGateway(hv, model, params, n_slots=4, max_len=64, paged=True)
+    sess = gw.open_session("acme", slots=2)
+    vs = hv.db.find_slice(sess.slice_id)
+    assert vs.cache_pages == gw._session_page_grant(2)
+    assert hv.db.page_grants()                        # device-level metering
+    gw.submit("acme", _prompt(cfg, 17, seed=0), max_new_tokens=4)
+    gw.step()
+    pages = hv.status()["pages"]
+    assert pages and next(iter(pages.values()))["used"] > 0
+    assert gw.run_until_idle() is True
+    gw.close()
+
+
+def test_fleet_handoff_copies_pages(served_model):
+    """A directed migration moves an in-flight request by copying its pool
+    pages — decode continues without prefix replay and the final tokens
+    match an unmigrated run."""
+    cfg, model, params = served_model
+    prompt = _prompt(cfg, 20, seed=5)
+
+    hv = Hypervisor(ClusterSpec(n_nodes=1, devices_per_node=2))
+    fl = GatewayFleet(hv, model, params, n_slots=4, max_len=64, paged=True)
+    fl.open_session("a", slots=2)
+    req = fl.submit("a", prompt, max_new_tokens=12)
+    for _ in range(3):
+        fl.step()
+    prefix = list(req.out_tokens)
+    assert hv.migrate_slice(fl.session("a").slice_id,
+                            target_device="dev-0-1") is not None
+    assert fl.handoffs[-1]["page_copied"] == 1
+    assert fl.handoffs[-1]["replayed_inflight"] == 0
+    assert fl.run_until_idle() is True
+    assert req.out_tokens[:len(prefix)] == prefix
+
+    hv2 = Hypervisor(ClusterSpec(n_nodes=1, devices_per_node=1))
+    fl2 = GatewayFleet(hv2, model, params, n_slots=4, max_len=64, paged=True)
+    fl2.open_session("a", slots=2)
+    ref = fl2.submit("a", prompt, max_new_tokens=12)
+    assert fl2.run_until_idle() is True
+    assert req.out_tokens == ref.out_tokens
+    fl.close()
+    fl2.close()
+
+
+def test_elastic_page_pressure_scales_out(served_model):
+    """A page-pressured device triggers elastic scale-out to a PARKED one;
+    the hand-off carries the page-hungriest tenant's traffic."""
+    cfg, model, params = served_model
+    hv = Hypervisor(ClusterSpec(n_nodes=1, devices_per_node=2))
+    fl = GatewayFleet(hv, model, params, n_slots=2, max_len=64, paged=True,
+                      cache_pages=9, autoscale_every=1, page_pressure=0.5)
+    fl.open_session("big", slots=1)
+    fl.open_session("small", slots=1)
+    assert len(fl._engines) == 1                     # packed on one device
+    fl.submit("big", _prompt(cfg, 33, seed=0), max_new_tokens=16)
+    fl.submit("small", _prompt(cfg, 17, seed=1), max_new_tokens=8)
+    for _ in range(6):
+        fl.step()
+    assert len(fl._engines) == 2, "page pressure should wake dev-0-1"
+    woke = [e for e in hv.log if e["kind"] == "elastic_page_pressure"]
+    assert woke
+    assert fl.run_until_idle() is True
+    fl.close()
