@@ -241,11 +241,21 @@ class DeviceDB:
             node.alive = False
             orphans = []
             for did in node.devices:
-                dev = self.devices[did]
-                dev.state = DeviceState.DEAD
-                orphans.extend(dev.slices.values())
-                dev.slices = {}
+                orphans.extend(self._kill_device(self.devices[did]))
             return orphans
+
+    def mark_device_dead(self, device_id: str) -> List[VSlice]:
+        """Device-granular failure (the node survives): one accelerator
+        dropped off the bus / failed its status read. Returns the orphaned
+        slices that need re-placement."""
+        with self._lock:
+            return self._kill_device(self.devices[device_id])
+
+    def _kill_device(self, dev: PhysicalDevice) -> List[VSlice]:
+        dev.state = DeviceState.DEAD
+        orphans = list(dev.slices.values())
+        dev.slices = {}
+        return orphans
 
     # ---------------- persistence ----------------
     def to_json(self) -> str:

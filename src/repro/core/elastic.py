@@ -9,7 +9,7 @@ onto the new data-parallel extent.
 """
 from __future__ import annotations
 
-from typing import List, Optional
+from typing import Callable, List, Optional
 
 from repro.core.device_db import (DeviceState, NoCapacityError, SliceState,
                                   VSlice)
@@ -116,16 +116,46 @@ class ElasticController:
         self.hv._log("elastic_scale_in", device=device_id)
         return True
 
+    def place_failover(self, owner: str, slots: int,
+                       service_model: str = "baas",
+                       cache_pages_of: Optional[Callable[[int], int]] = None
+                       ) -> Optional[VSlice]:
+        """Re-place a dead device's tenant on surviving capacity. Tries the
+        tenant's full slot count first; when the survivors cannot fit it,
+        degrades 4 -> 2 -> 1 (elastic degrade — a smaller slice now beats a
+        lost session). PARKED devices count as survivors: the allocator
+        waking one IS the scale-out half of failover.
+
+        ``cache_pages_of`` maps a slot count to that placement's page
+        grant (the fleet passes its per-session grant formula). It is
+        re-evaluated at every degrade step: on a page-metered cluster a
+        smaller slice must ask for its OWN smaller grant, or a placement
+        that fits in slots would keep failing on pages — and a degraded
+        slice would over-reserve the full-size grant forever.
+
+        Returns the new slice (``slots`` may be smaller than requested),
+        or None when not even a 1-slot slice fits anywhere."""
+        s = slots
+        while s >= 1:
+            try:
+                vs = self.hv.db.allocate_slice(
+                    owner, s, service_model,
+                    cache_pages=cache_pages_of(s) if cache_pages_of else 0)
+            except NoCapacityError:
+                s //= 2
+                continue
+            self.hv._log("failover_place", owner=owner, slice=vs.slice_id,
+                         device=vs.device_id, slots=s, requested=slots,
+                         degraded=s != slots)
+            return vs
+        return None
+
     def shrink_to_survivors(self, owner: str) -> Optional[VSlice]:
         """After a node failure: re-place the tenant on surviving capacity at
         the largest slot count that fits (elastic degrade). Returns the new
         slice, or None if the cluster is full."""
-        for slots in (4, 2, 1):
-            try:
-                vs = self.hv.db.allocate_slice(owner, slots, "raas")
-                self.hv._log("elastic_degrade", owner=owner, slots=slots,
-                             slice=vs.slice_id)
-                return vs
-            except NoCapacityError:
-                continue
-        return None
+        vs = self.place_failover(owner, 4, "raas")
+        if vs is not None:
+            self.hv._log("elastic_degrade", owner=owner, slots=vs.slots,
+                         slice=vs.slice_id)
+        return vs

@@ -228,6 +228,28 @@ class Hypervisor:
             self._log("failover", orphans=ids)
         return ids
 
+    def mark_device_failed(self, device_id: str,
+                           reason: str = "status_error") -> List[str]:
+        """Device-granular failure: one accelerator failed its status read
+        (the gcs analogue) while its node stayed up. Marks the device DEAD,
+        clears its telemetry (step windows + page occupancy — a dead pool
+        must not keep feeding the straggler / page-pressure policies),
+        requeues orphaned batch jobs, and returns the orphaned slice ids.
+        Serving sessions are re-placed by the fleet's recovery sweep, which
+        watches for DEAD devices holding engines."""
+        orphans = self.db.mark_device_dead(device_id)
+        ids = [s.slice_id for s in orphans]
+        for sid in ids:
+            self.monitor.clear_slice(sid)
+        self.monitor.clear_pages(device_id)
+        self.monitor.events.append({"t": self.clock(), "kind": "device_dead",
+                                    "device": device_id, "orphans": ids})
+        if ids:
+            self.scheduler.requeue_orphans(ids)
+        self._log("device_failed", device=device_id, reason=reason,
+                  orphans=ids)
+        return ids
+
     def migrate_slice(self, slice_id: str,
                       target_device: Optional[str] = None,
                       reason: str = "straggler") -> Optional[VSlice]:

@@ -43,17 +43,26 @@ class Monitor:
         self.db.nodes[node_id].last_heartbeat = self.clock()
 
     def check_heartbeats(self) -> List[VSlice]:
-        """Mark nodes past deadline DEAD; return orphaned slices."""
+        """Mark nodes past deadline DEAD; return orphaned slices. A dead
+        node's telemetry dies with it: its slices' step windows (they must
+        not keep feeding the fleet median / straggler policy) and its
+        devices' page-occupancy entries (a dead pool is not "pressured" —
+        it would otherwise trip page-pressure scale-out forever)."""
         now = self.clock()
         orphans: List[VSlice] = []
         for node in list(self.db.nodes.values()):
             if not node.alive:
                 continue
             if now - node.last_heartbeat > self.cfg.heartbeat_deadline_s:
-                orphans.extend(self.db.mark_node_dead(node.node_id))
+                dead = self.db.mark_node_dead(node.node_id)
+                for s in dead:
+                    self.clear_slice(s.slice_id)
+                for did in node.devices:
+                    self.clear_pages(did)
+                orphans.extend(dead)
                 self.events.append({"t": now, "kind": "node_dead",
                                     "node": node.node_id,
-                                    "orphans": [s.slice_id for s in orphans]})
+                                    "orphans": [s.slice_id for s in dead]})
         return orphans
 
     # ---------------- stragglers ----------------

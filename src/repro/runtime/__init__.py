@@ -1,4 +1,5 @@
-from repro.runtime.fleet import GatewayFleet
+from repro.runtime.faults import FakeClock, FaultEvent, FaultInjector
+from repro.runtime.fleet import GatewayFleet, JournalEntry
 from repro.runtime.gateway import ServingGateway, TenantSession
 from repro.runtime.losses import chunked_xent, full_xent
 from repro.runtime.paged import PagePoolManager

@@ -19,10 +19,19 @@ everyone on ONE engine, so a migration only moved bookkeeping. The
     microseconds — the paper's partial-reconfiguration argument);
   * elastic scaling wired to ``ElasticController`` and the energy policy:
     a deep aggregate backlog wakes a PARKED device and moves the hottest
-    tenant onto it; empty idle devices drain back to PARKED.
+    tenant onto it; empty idle devices drain back to PARKED;
+  * crash-consistent failover (paper §IV: the hypervisor monitors the
+    physical devices so user designs survive device events): a recovery
+    journal records every unfinished request's prompt + generated-token
+    log, and ``recover_device`` re-places a dead device's sessions on
+    surviving/woken engines, resuming in-flight requests by prefix replay
+    — no live source engine needed, quota and pages settled exactly once.
+    ``runtime/faults.py``'s seeded ``FaultInjector`` drives it all under
+    test (``tests/test_chaos.py``).
 """
 from __future__ import annotations
 
+import dataclasses
 import itertools
 import time
 from typing import Dict, List, Optional, Tuple
@@ -30,14 +39,37 @@ from typing import Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.device_db import DeviceState, SliceState
 from repro.core.elastic import ElasticController
 from repro.core.hypervisor import Hypervisor
 from repro.models.api import Model
+from repro.runtime.faults import FaultInjector
 from repro.runtime.gateway import (TenantSession, settle_finished_request,
                                    validate_submit)
 from repro.runtime.paged import default_pool_pages
 from repro.runtime.serve import (BatchingEngine, Request,
                                  make_paged_serve_step, make_serve_step)
+
+
+def _mark_cancelled(req: Request) -> None:
+    """Stamp a request cancelled outside any engine (caught in transit
+    between engines, or torn down with an evicted session)."""
+    req.finish_reason = "cancelled"
+    req.finished_at = time.monotonic()
+    req.done.set()
+
+
+@dataclasses.dataclass
+class JournalEntry:
+    """One unfinished request's durable record in the fleet's recovery
+    journal: everything failover needs to resume it on another engine
+    WITHOUT a live source — the prompt lives on the request, the
+    generated-token log is this entry's own copy (synced after every
+    fleet step), and quota state is implied by the entry's existence
+    (journaled == admitted and not yet settled)."""
+    req: Request
+    tenant: str
+    tokens: List[int] = dataclasses.field(default_factory=list)
 
 
 class GatewayFleet:
@@ -53,7 +85,8 @@ class GatewayFleet:
                  autoscale_every: int = 0, scale_up_queue_depth: int = 8,
                  paged: bool = False, page_size: int = 16,
                  cache_pages: Optional[int] = None,
-                 page_pressure: float = 0.85):
+                 page_pressure: float = 0.85,
+                 faults: Optional[FaultInjector] = None):
         # fail fast, before any session can allocate: lazy engine creation
         # must never be the first place this surfaces (it would strand an
         # admitted tenant and its vSlice)
@@ -77,6 +110,17 @@ class GatewayFleet:
         self.autoscale_every = autoscale_every   # steps between autoscale
         self.scale_up_queue_depth = scale_up_queue_depth
         self.elastic = ElasticController(hv)
+        # deterministic chaos: when an injector is attached, every step()
+        # ticks it (clock + heartbeats + scheduled faults) and runs the
+        # heartbeat/failover sweep. Without one, the sweep stays off so a
+        # slow wall-clock test run can never spuriously declare nodes dead.
+        self.faults = faults
+        # recovery journal: request_id -> JournalEntry for every admitted,
+        # not-yet-settled request. THE source of truth for failover — a
+        # dead device's engine (queues, slots, KV pages) is gone, but the
+        # journal re-creates its traffic by prefix replay elsewhere.
+        self.journal: Dict[int, JournalEntry] = {}
+        self.recoveries: List[dict] = []
         # one id stream for the whole fleet: request ids must stay unique
         # across engines (audit log + hand-off both key on them)
         self._req_ids = itertools.count()
@@ -209,12 +253,19 @@ class GatewayFleet:
         dev = self._device_of.pop(tenant)
         engine = self._engines.get(dev)
         if engine is not None:
-            engine.cancel_queued(tenant)
+            for r in engine.cancel_queued(tenant):
+                self.journal.pop(r.request_id, None)
             engine.set_tenant_share(tenant, None)
             engine.set_tenant_pages(tenant, None)
-        for _ in range(max(0, sess.submitted - sess.served)):
-            self.hv.admission.finish_request(tenant, sess.service_model)
+        self._settle_outstanding(sess)
         self.hv.close_serving_session(sess.slice_id)
+
+    def _settle_outstanding(self, sess: TenantSession):
+        """Return a closing session's unfinished in-flight quota (requests
+        still decoding finish as orphans and are not re-settled — see
+        ``settle_finished_request``'s session-identity guard)."""
+        for _ in range(max(0, sess.submitted - sess.served)):
+            self.hv.admission.finish_request(sess.tenant, sess.service_model)
 
     def close(self):
         for tenant in list(self._sessions):
@@ -244,32 +295,62 @@ class GatewayFleet:
         req = self.engine_for(tenant).submit(prompt, max_new_tokens,
                                              tenant=tenant)
         req._session = sess
+        self.journal[req.request_id] = JournalEntry(req, tenant)
         return req
 
     def cancel(self, req: Request) -> bool:
         """Cancel one request on whichever engine holds it (queued or in
-        flight; an in-flight cancel frees the slot and its pool pages)."""
+        flight; an in-flight cancel frees the slot and its pool pages).
+
+        A request can also be caught BETWEEN engines: drained for a live
+        hand-off (after its pages were exported, before ``resume``) or
+        orphaned by a dead device awaiting recovery. No engine holds a
+        slot or pages for it then — its pages were already freed by the
+        drain / died with the device — so only the bookkeeping settles
+        here, exactly once; the done-flag guard in ``resume`` keeps the
+        in-flight hand-off from re-queuing it afterwards."""
+        # recover first: cancelling on an engine whose device was marked
+        # dead between steps would settle against a slice that died with
+        # the device (and leak the in-flight quota on the KeyError)
+        self._recover_dead_engines()
         for eng in self._engines.values():
             if eng.cancel(req):
                 return True
+        if req.request_id in self.journal and not req.done.is_set():
+            _mark_cancelled(req)
+            self._on_finish(req)
+            return True
         return False
 
     def step(self) -> int:
         """One decode step on EVERY active engine (devices run concurrently
         in hardware; ``last_round_ms`` records each device's wall time so
-        callers can account device-parallel time). Periodically sweeps for
-        stragglers and autoscales."""
+        callers can account device-parallel time). With a fault injector
+        attached, each step boundary first ticks the injector (clock,
+        heartbeats, scheduled kills), runs the heartbeat sweep, and
+        recovers any engine stranded on a dead device. Periodically sweeps
+        for stragglers and autoscales."""
+        if self.faults is not None:
+            self.faults.tick(self.hv)
+            self.hv.handle_failures()
+        self._recover_dead_engines()
         total = 0
         self.last_round_ms = {}
         for dev in list(self._engines):
             eng = self._engines.get(dev)
             if eng is None:      # parked by a hand-off mid-round
                 continue
+            if not self._device_alive(dev):
+                continue         # crashed mid-detection-window: frozen
             t0 = time.monotonic()
             n = eng.step()
             if n:
                 self.last_round_ms[dev] = (time.monotonic() - t0) * 1e3
             total += n
+            for r in eng.inflight():
+                entry = self.journal.get(r.request_id)
+                if entry is not None:
+                    entry.tokens = list(r.out_tokens)
             if eng.paged:
                 self.hv.monitor.record_pages(dev, eng.pool.used_pages,
                                              eng.pool.total_pages)
@@ -282,12 +363,16 @@ class GatewayFleet:
 
     def run_until_idle(self, max_steps: int = 10000) -> bool:
         """Returns True when every engine drained; False on a stall
-        (max_steps expired, or queued work that can make no progress)."""
+        (max_steps expired, or queued work that can make no progress).
+        With a fault injector attached, a zero-progress round is NOT a
+        stall: a killed-but-undetected node freezes its engine for the
+        length of the heartbeat deadline, and recovery resumes the work
+        a few steps later."""
         for _ in range(max_steps):
             n = self.step()
             if all(e.idle() for e in self._engines.values()):
                 return True
-            if n == 0:
+            if n == 0 and self.faults is None:
                 return False
         return all(e.idle() for e in self._engines.values())
 
@@ -306,6 +391,9 @@ class GatewayFleet:
                 sess.slice_id, step_ms * n / (total * sess.slots))
 
     def _on_finish(self, req: Request):
+        # retire the journal entry FIRST: a settled request must never be
+        # replayed by a later recovery (exactly-once accounting)
+        self.journal.pop(req.request_id, None)
         settle_finished_request(self.hv, self._sessions, req)
 
     # ------------------------------------------------------------------
@@ -339,6 +427,9 @@ class GatewayFleet:
             # by the source's next admission
             if source.paged and target.paged:
                 for r in source.inflight(sess.tenant):
+                    if self.faults is not None \
+                            and self.faults.fail_page_copy():
+                        continue         # copy lost: replay fallback
                     p = source.export_request_pages(r)
                     if p is not None:
                         payloads[id(r)] = p
@@ -351,6 +442,8 @@ class GatewayFleet:
             target.set_tenant_pages(sess.tenant, vs.cache_pages or None)
         page_copied = replayed = 0
         for r in moved:
+            if r.done.is_set():
+                continue    # cancelled mid-hand-off: already settled
             payload = payloads.get(id(r))
             if payload is not None and target.import_request_pages(r, payload):
                 page_copied += 1
@@ -369,6 +462,149 @@ class GatewayFleet:
         """Straggler sweep; hand-offs happen in the migration listener."""
         self.hv.migrate_stragglers()
         return self.hv.last_migrations
+
+    # ------------------------------------------------------------------
+    # Crash-consistent failover (no live source engine)
+    # ------------------------------------------------------------------
+    def _device_alive(self, device_id: str) -> bool:
+        dev = self.hv.db.devices[device_id]
+        if dev.state == DeviceState.DEAD \
+                or not self.hv.db.nodes[dev.node_id].alive:
+            return False
+        # a killed-but-undetected device must freeze NOW, not when the
+        # heartbeat deadline expires
+        return self.faults is None \
+            or not self.faults.is_dead(dev.node_id, device_id)
+
+    def _recover_dead_engines(self) -> List[str]:
+        """Failover sweep: any engine whose device the control plane has
+        declared dead gets its sessions re-placed and its requests resumed
+        from the journal. (Engines on killed-but-undetected nodes keep
+        their state and simply skip stepping until the monitor notices.)"""
+        recovered = []
+        for dev in list(self._engines):
+            d = self.hv.db.devices[dev]
+            if d.state == DeviceState.DEAD \
+                    or not self.hv.db.nodes[d.node_id].alive:
+                self.recover_device(dev)
+                recovered.append(dev)
+        return recovered
+
+    def recover_device(self, device_id: str) -> dict:
+        """Re-place every session stranded on a dead device and resume its
+        unfinished requests by prefix replay from the recovery journal.
+
+        Contrast ``_on_migration``: a live hand-off drains a RUNNING
+        source engine (and can copy pages). Here the source is gone —
+        engine, queues, slots and KV pages died with the device — so the
+        journal is the only truth: each orphaned request's generated-token
+        log is restored onto the request and replayed as a prompt prefix
+        on a surviving (or woken) engine. Page accounting needs no
+        settling (the dead pool took its refcounts with it and the
+        monitor's occupancy entry is cleared); admission quota stays held
+        by each request until it finishes on its new engine — settled
+        exactly once, by the normal ``_on_finish`` path.
+
+        A tenant that fits NOWHERE (even degraded to 1 slot, even after
+        waking every PARKED device) is evicted: its unfinished requests
+        are cancelled and its quota settled, exactly once.
+        """
+        self._engines.pop(device_id, None)      # dataplane died with device
+        self.hv.monitor.clear_pages(device_id)
+        tenants = [t for t, d in self._device_of.items() if d == device_id]
+        event = {"device": device_id, "tenants": tenants, "resumed": 0,
+                 "evicted": []}
+        for tenant in tenants:
+            sess = self._sessions[tenant]
+            # the grant formula rides along so each degrade step asks for
+            # the page grant matching ITS slot count, not the original's
+            vs = self.elastic.place_failover(
+                tenant, sess.slots, sess.service_model,
+                cache_pages_of=self._session_page_grant)
+            if vs is None:
+                self._evict_session(tenant, sess)
+                event["evicted"].append(tenant)
+                continue
+            if vs.slots < sess.slots:
+                # elastic degrade: hand back the slot quota difference so
+                # admission matches what the tenant actually holds now
+                self.hv.admission.release_tenant(
+                    tenant, sess.service_model, sess.slots - vs.slots)
+                sess.slots = vs.slots
+            self.hv.db.set_slice_state(vs.slice_id, SliceState.CONFIGURED,
+                                       program=self.program_fingerprint)
+            sess.slice_id = vs.slice_id
+            self._device_of[tenant] = vs.device_id
+            target = self._ensure_engine(vs.device_id)
+            target.set_tenant_share(tenant, vs.slots)
+            if self.paged:
+                target.set_tenant_pages(tenant, vs.cache_pages or None)
+            # journal replay in submission order (dict preserves it): the
+            # tenant's FIFO survives the crash
+            for entry in list(self.journal.values()):
+                if entry.tenant != tenant or entry.req.done.is_set():
+                    continue
+                # crash consistency: roll the request back to its durably
+                # journaled token log (tokens past it regenerate bit-exact
+                # under greedy decoding — the chaos suite proves it)
+                entry.req.out_tokens = list(entry.tokens)
+                target.resume(entry.req)
+                event["resumed"] += 1
+        self.recoveries.append(event)
+        self.hv._log("device_recovered", **event)
+        return event
+
+    def _evict_session(self, tenant: str, sess: TenantSession):
+        """Tear down a session whose vSlice died with its device and that
+        no surviving capacity can host: cancel its unfinished requests and
+        settle every outstanding quota exactly once. (There is no slice to
+        release — ``mark_node_dead``/``mark_device_dead`` already dropped
+        it — but the admission controller's slot + in-flight counts are
+        fleet-side state and must not leak.)"""
+        cancelled = 0
+        for rid, entry in list(self.journal.items()):
+            if entry.tenant != tenant or entry.req.done.is_set():
+                continue
+            del self.journal[rid]
+            _mark_cancelled(entry.req)
+            cancelled += 1
+        self._settle_outstanding(sess)
+        self.hv.admission.release_tenant(tenant, sess.service_model,
+                                         sess.slots)
+        self._sessions.pop(tenant, None)
+        self._device_of.pop(tenant, None)
+        self.hv._log("failover_evict", tenant=tenant, cancelled=cancelled)
+
+    def verify_invariants(self) -> None:
+        """Machine-checked fleet-wide conservation — the chaos harness
+        calls this after every step:
+
+          * every paged engine's pool passes ``PagePoolManager.verify()``
+            (free + referenced == total, no refcount leaks);
+          * per-tenant admission in-flight count equals that tenant's
+            unfinished journaled requests (quota conservation: nothing
+            settled twice, nothing leaked across kills/hand-offs);
+          * sessions map onto live devices with live engines.
+        """
+        for dev, eng in self._engines.items():
+            if eng.paged:
+                eng.pool.verify()
+        unfinished: Dict[str, int] = {}
+        for entry in self.journal.values():
+            if not entry.req.done.is_set():
+                unfinished[entry.tenant] = unfinished.get(entry.tenant, 0) + 1
+        for tenant, sess in self._sessions.items():
+            inflight = self.hv.admission.usage(
+                tenant, sess.service_model)["inflight"]
+            assert inflight == unfinished.get(tenant, 0), \
+                f"quota drift for {tenant!r}: admission holds {inflight} " \
+                f"in flight, journal has {unfinished.get(tenant, 0)} " \
+                "unfinished"
+            dev = self._device_of[tenant]
+            assert self.hv.db.devices[dev].state != DeviceState.DEAD, \
+                f"session {tenant!r} bound to dead device {dev}"
+            assert dev in self._engines, \
+                f"session {tenant!r} on {dev} has no engine"
 
     # ------------------------------------------------------------------
     # Elastic scaling (queue depth <-> energy policy)

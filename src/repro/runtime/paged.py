@@ -279,6 +279,61 @@ class PagePoolManager:
         self._slot_pages[slot] = []
         self.block_tables[slot, :] = 0
 
+    # ---------------- invariants ----------------
+    def verify(self) -> None:
+        """Machine-checked conservation invariants — the chaos harness and
+        the property suite call this after every event:
+
+          * ``free + referenced == total`` (no page leaked, none lost);
+          * the free list holds no duplicates and only ref==0 pages;
+          * every referenced page's refcount equals the number of slots
+            holding it (registrations never outlive their pages);
+          * per-tenant accounting sums exactly to the referenced pages;
+          * block tables mirror the slot page lists (tail zeroed);
+          * the prefix cache and its reverse map are a bijection onto
+            live pages.
+
+        Raises AssertionError on the first violation.
+        """
+        assert self._ref[0] == 1, "null page refcount must stay pinned at 1"
+        free_set = set(self._free)
+        assert len(free_set) == len(self._free), "free-list duplicate " \
+            "(double-free)"
+        assert 0 not in free_set, "null page on the free list"
+        for pid in free_set:
+            assert self._ref[pid] == 0, f"free page {pid} has refcount " \
+                f"{self._ref[pid]}"
+        referenced = [p for p in range(1, self.n_pages) if self._ref[p] > 0]
+        assert len(referenced) + len(self._free) == self.total_pages, \
+            f"page conservation broken: {len(referenced)} referenced + " \
+            f"{len(self._free)} free != {self.total_pages} total"
+        holders: Dict[int, int] = {}
+        for slot, pages in enumerate(self._slot_pages):
+            for bi, pid in enumerate(pages):
+                assert self._ref[pid] > 0, \
+                    f"slot {slot} holds freed page {pid}"
+                assert self.block_tables[slot, bi] == pid, \
+                    f"block table desync at slot {slot} block {bi}"
+                holders[pid] = holders.get(pid, 0) + 1
+            assert not self.block_tables[slot, len(pages):].any(), \
+                f"slot {slot} block-table tail not zeroed"
+        for pid in referenced:
+            assert self._ref[pid] == holders.get(pid, 0), \
+                f"page {pid} refcount {self._ref[pid]} != " \
+                f"{holders.get(pid, 0)} slot holders"
+        assert sum(self._tenant_pages.values()) == len(referenced), \
+            "tenant page accounting != referenced pages"
+        assert set(self._owner) == set(referenced), \
+            "owner map out of sync with referenced pages"
+        for key, pid in self._prefix.items():
+            assert self._page_key.get(pid) == key, \
+                f"prefix entry for page {pid} lost its reverse mapping"
+            assert self._ref[pid] > 0, f"prefix cache points at freed " \
+                f"page {pid}"
+        for pid, key in self._page_key.items():
+            assert self._prefix.get(key) == pid, \
+                f"reverse prefix mapping for page {pid} dangling"
+
     # ---------------- introspection ----------------
     def stats(self) -> dict:
         return {

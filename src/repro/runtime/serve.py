@@ -313,7 +313,14 @@ class BatchingEngine:
         """Requeue a request drained from another engine (live migration)
         or preempted locally: its already-generated tokens are preserved
         and replayed as a prompt prefix when the request is re-admitted
-        (see ``_admit``). ``front`` preserves FIFO order for preemption."""
+        (see ``_admit``). ``front`` preserves FIFO order for preemption.
+
+        A request cancelled while in transit between engines (drained for
+        a hand-off but not yet resumed, or orphaned by a dead device) is
+        already settled — requeuing it would decode a finished request and
+        settle its quota twice, so it is dropped here."""
+        if req.done.is_set():
+            return req
         with self._qlock:
             q = self._queues.setdefault(req.tenant, collections.deque())
             if front:

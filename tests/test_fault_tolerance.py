@@ -51,6 +51,61 @@ def test_heartbeat_failure_requeues_jobs():
     assert new_node != dead_node
 
 
+def test_dead_node_sweep_clears_monitor_state():
+    """Regression: the dead-device sweep used to leave the Monitor's
+    step-telemetry and page-occupancy entries stale — a dead slice kept
+    feeding the fleet median and a dead pool stayed 'page-pressured'
+    forever."""
+    clock = FakeClock()
+    hv = Hypervisor(ClusterSpec(n_nodes=2, devices_per_node=1),
+                    MonitorConfig(heartbeat_deadline_s=10), clock=clock)
+    vs = hv.allocate_vslice("t", 1)
+    dead_node = hv.db.devices[vs.device_id].node_id
+    for _ in range(4):
+        hv.monitor.record_step(vs.slice_id, 400.0)
+    hv.monitor.record_pages(vs.device_id, 7, 8)
+    assert hv.monitor.find_page_pressure()
+    for n in hv.db.nodes:
+        hv.monitor.heartbeat(n)
+    clock.t = 8.0
+    for n in hv.db.nodes:
+        if n != dead_node:
+            hv.monitor.heartbeat(n)
+    clock.t = 15.0
+    assert vs.slice_id in hv.handle_failures()
+    assert vs.slice_id not in hv.monitor._step_times
+    assert hv.monitor.median_step_ms() is None
+    assert vs.device_id not in hv.monitor.page_occupancy()
+    assert not hv.monitor.find_page_pressure()
+    assert not hv.monitor.find_stragglers()
+
+
+def test_device_failure_is_device_granular():
+    """mark_device_failed kills ONE device: its node survives, its sibling
+    devices keep serving, its batch jobs requeue, and its telemetry is
+    cleared exactly like the node-death path."""
+    clock = FakeClock()
+    hv = Hypervisor(ClusterSpec(n_nodes=1, devices_per_node=2), clock=clock)
+    job = hv.scheduler.submit("u", 1, run=None)
+    hv.scheduler.schedule_once()
+    sid = job.slice_id
+    dev = hv.db.find_slice(sid).device_id
+    hv.monitor.record_step(sid, 50.0)
+    hv.monitor.record_pages(dev, 3, 8)
+    orphans = hv.mark_device_failed(dev, reason="status_error")
+    assert orphans == [sid]
+    assert hv.db.devices[dev].state == DeviceState.DEAD
+    assert hv.db.nodes["node-0"].alive                    # node survives
+    assert job.state == JobState.REQUEUED
+    assert sid not in hv.monitor._step_times
+    assert dev not in hv.monitor.page_occupancy()
+    assert any(e["kind"] == "device_dead" for e in hv.monitor.events)
+    # rescheduling lands on the surviving sibling device
+    hv.scheduler.schedule_once()
+    assert job.state == JobState.RUNNING
+    assert hv.db.find_slice(job.slice_id).device_id != dev
+
+
 def test_straggler_migration():
     clock = FakeClock()
     hv = Hypervisor(ClusterSpec(n_nodes=2, devices_per_node=1),

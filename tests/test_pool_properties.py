@@ -1,0 +1,100 @@
+"""Property-based PagePoolManager tests: random alloc / grow / share-COW /
+free / cancel sequences must never leak a page, never double-free, and keep
+``free + referenced == total`` (with per-tenant accounting and the prefix
+cache consistent) after EVERY operation.
+
+Two drivers over the same random walk: a hypothesis ``@given`` (skipped via
+the conftest stub when hypothesis is not installed) and a fixed seeded soak
+that always runs.
+"""
+import random
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.runtime.paged import NoPagesError, PagePoolManager
+
+N_SLOTS = 4
+MAX_BLOCKS = 6
+PAGE_SIZE = 4
+N_PAGES = 14                       # 13 usable: forces exhaustion regularly
+TENANTS = ("alice", "bob")
+
+
+def _random_context(rng):
+    """Token contexts drawn from a tiny alphabet so prefix collisions (and
+    therefore sharing + COW) actually happen."""
+    n = rng.randrange(1, MAX_BLOCKS * PAGE_SIZE)
+    return [rng.randrange(4) for _ in range(n)]
+
+
+def _random_walk(seed: int, n_ops: int = 120):
+    rng = random.Random(seed)
+    pool = PagePoolManager(N_PAGES, PAGE_SIZE, N_SLOTS, MAX_BLOCKS)
+    occupied = {}                  # slot -> tenant
+    for _ in range(n_ops):
+        op = rng.choice(("admit", "admit", "grow", "cow", "release",
+                         "double_release"))
+        if op == "admit":
+            free_slots = [s for s in range(N_SLOTS) if s not in occupied]
+            if not free_slots:
+                continue
+            slot, tenant = rng.choice(free_slots), rng.choice(TENANTS)
+            toks = _random_context(rng)
+            if pool.pages_needed(tenant, toks) > pool.free_pages:
+                # the engine's queue-on-exhaustion gate; admitting anyway
+                # must raise AND roll back cleanly
+                free_before = pool.free_pages
+                with pytest.raises(NoPagesError):
+                    pool.admit(slot, tenant, toks)
+                assert pool.free_pages == free_before
+            else:
+                pool.admit(slot, tenant, toks)
+                occupied[slot] = tenant
+        elif op == "grow" and occupied:
+            slot = rng.choice(sorted(occupied))
+            if pool.free_pages >= 1 \
+                    and len(pool.slot_blocks(slot)) < MAX_BLOCKS:
+                pool.grow(slot, occupied[slot])
+        elif op == "cow" and occupied:
+            slot = rng.choice(sorted(occupied))
+            shared = [b for b in range(len(pool.slot_blocks(slot)))
+                      if pool.is_shared(slot, b)]
+            if shared and pool.free_pages >= 1:
+                src, dst = pool.cow(slot, rng.choice(shared),
+                                    occupied[slot])
+                assert src != dst
+            elif pool.slot_blocks(slot):
+                pool.touch_write(slot, len(pool.slot_blocks(slot)) - 1)
+        elif op == "release" and occupied:
+            slot = rng.choice(sorted(occupied))
+            pool.release_slot(slot)
+            del occupied[slot]
+        elif op == "double_release":
+            # cancel/release of an already-free slot must be a no-op,
+            # never an underflow
+            free_slots = [s for s in range(N_SLOTS) if s not in occupied]
+            if free_slots:
+                before = pool.free_pages
+                pool.release_slot(rng.choice(free_slots))
+                assert pool.free_pages == before
+        pool.verify()
+    # teardown: releasing everything returns every page
+    for slot in list(occupied):
+        pool.release_slot(slot)
+    pool.verify()
+    assert pool.used_pages == 0
+    assert pool.free_pages == pool.total_pages
+    assert pool.pages_by_tenant() == {}
+
+
+@pytest.mark.parametrize("seed", range(10))
+def test_pool_random_walk_seeded(seed):
+    _random_walk(seed)
+
+
+@given(st.integers(min_value=0, max_value=2**32 - 1))
+@settings(max_examples=30, deadline=None)
+def test_pool_random_walk_hypothesis(seed):
+    _random_walk(seed)
