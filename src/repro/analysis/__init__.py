@@ -1,0 +1,17 @@
+"""rc3e-check: static + dynamic enforcement of RC3E's resource discipline.
+
+Static half (``python -m repro.analysis src/``): four AST/dataflow passes
+— ownership (acquire/release pairing), hostsync (device syncs reachable
+from the per-token loop), determinism (wall clocks, unseeded RNG, set
+iteration), kernels (Pallas traced branches + grid divisibility +
+registry shape check). Dynamic half: the ``RC3E_SANITIZE=1`` lifecycle
+sanitizer in :mod:`repro.analysis.lifecycle`.
+
+This ``__init__`` stays import-light (lifecycle only — stdlib) because
+the runtime imports the sanitizer on every start; the analyzer passes
+load only under ``python -m repro.analysis``.
+"""
+from repro.analysis.lifecycle import (LifecycleViolation, Sanitizer,
+                                      sanitizer)
+
+__all__ = ["LifecycleViolation", "Sanitizer", "sanitizer"]

@@ -1,0 +1,85 @@
+"""Hot-path host-sync pass.
+
+``BatchingEngine.step()`` is the per-token loop: everything it reaches
+runs once per decoded token for every active slot. A device->host sync
+there (``np.asarray`` on a device array, ``.item()``, ``float()`` of a
+traced value, ``block_until_ready``) stalls the accelerator pipeline per
+token; a host->device re-wrap (``jnp.asarray`` of host state) uploads per
+token. The paper's monitoring loop (§V) is explicitly off the data path
+for the same reason.
+
+The pass computes the set of functions reachable from
+``BatchingEngine.step`` (conservative name-based call graph) and flags
+every sync marker inside them. Justified sites carry
+``# rc3e: allow-host-sync`` with a reason; merely grandfathered ones live
+in the committed baseline.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from repro.analysis.common import (Finding, Workspace, call_name,
+                                   dotted_call)
+
+PASS = "hostsync"
+RULE = "host-sync"
+HOT_ROOT = "BatchingEngine.step"
+
+# device -> host (each one is a pipeline stall in the per-token loop)
+D2H_CALLS = {"asarray", "array", "item", "block_until_ready", "tolist"}
+# numpy module aliases whose .asarray/.array force a device download
+NUMPY_NAMES = {"np", "numpy"}
+# host -> device: re-uploading host state every step
+JNP_NAMES = {"jnp"}
+
+
+def _marker(node: ast.Call) -> str:
+    """Classify a call as a sync marker; '' if benign."""
+    name = call_name(node)
+    f = node.func
+    if isinstance(f, ast.Attribute):
+        base = f.value
+        if name in {"asarray", "array"} and isinstance(base, ast.Name):
+            if base.id in NUMPY_NAMES:
+                return f"np.{name}() forces a device->host download"
+            if base.id in JNP_NAMES:
+                return (f"jnp.{name}() re-uploads host state to the "
+                        "device every step")
+        if name == "item":
+            return ".item() blocks on the device and downloads a scalar"
+        if name == "tolist" and not isinstance(base, ast.Constant):
+            return ".tolist() downloads the whole array"
+        if name == "block_until_ready":
+            return ".block_until_ready() stalls until the device drains"
+    if isinstance(f, ast.Name):
+        if name == "float" and node.args \
+                and not isinstance(node.args[0], ast.Constant):
+            return "float() of a device value blocks and downloads it"
+        if name == "block_until_ready":
+            return ".block_until_ready() stalls until the device drains"
+    return ""
+
+
+def run(ws: Workspace) -> List[Finding]:
+    hot = ws.reachable_from(HOT_ROOT)
+    out: List[Finding] = []
+    for mod in ws.modules:
+        for fi in mod.functions:
+            if f"{mod.rel}::{fi.qualname}" not in hot:
+                continue
+            for node in ast.walk(fi.node):
+                if not isinstance(node, ast.Call):
+                    continue
+                why = _marker(node)
+                if not why:
+                    continue
+                if mod.allows(node.lineno, RULE, fi.node):
+                    continue
+                out.append(Finding(
+                    PASS, RULE, mod.rel, node.lineno, fi.qualname,
+                    f"{dotted_call(node) or call_name(node)}() in the "
+                    f"per-token hot path (reachable from {HOT_ROOT}): "
+                    f"{why} — hoist it out of the loop, keep the value "
+                    "on-device, or justify with `# rc3e: allow-host-sync`"))
+    return out

@@ -1,0 +1,244 @@
+"""Pallas kernel pass.
+
+Two static rules over ``kernels/`` plus one executed registry check:
+
+  * **traced-branch** — Python ``if``/``while`` on a traced value
+    (``pl.program_id``, anything loaded from a ``*_ref``): inside a
+    kernel these must be ``pl.when`` / ``jnp.where`` — a Python branch
+    either fails tracing or silently bakes in one side. ``is None``
+    checks on optional ref parameters and branches on static (kwonly,
+    partial-bound) params stay legal.
+  * **grid-divisibility** — a ``grid = (..., X // b, ...)`` whose
+    numerator is neither guarded by an ``assert X % b == 0`` nor
+    produced by a round-up/padding helper (``_pad_to``/``cdiv``/...):
+    a non-divisible shape would silently drop the ragged tail.
+  * **registry-shapes** — executed (not AST) check that every config in
+    the architecture registry tiles cleanly: ``max_seq_len`` divisible
+    by the decode sweep block and the KV page size, ``head_dim`` lane-
+    aligned. Run against both full and ``reduced()`` shapes.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Set
+
+from repro.analysis.common import (Finding, ModuleInfo, Workspace,
+                                   call_name)
+
+PASS = "kernels"
+
+PAD_HELPERS = ("pad", "cdiv", "ceil", "round")   # substring match on callee
+DECODE_BLOCK = 512      # default bk in decode_attention
+PAGE_SIZE = 16          # engine default page size
+LANE_ALIGN = 8
+
+
+# ---------------------------------------------------------------------------
+# traced-branch
+# ---------------------------------------------------------------------------
+
+def _ref_params(func: ast.AST) -> Set[str]:
+    args = func.args
+    names = [a.arg for a in args.posonlyargs + args.args]
+    return {n for n in names if n.endswith("_ref") or n == "ref"}
+
+
+def _tainted_names(func: ast.AST) -> Set[str]:
+    """Names carrying traced values: assigned from pl.program_id or from
+    a ``*_ref`` load, transitively through plain assignments."""
+    refs = _ref_params(func)
+    tainted: Set[str] = set()
+
+    def expr_tainted(e: ast.AST) -> bool:
+        for n in ast.walk(e):
+            if isinstance(n, ast.Call) and call_name(n) == "program_id":
+                return True
+            if isinstance(n, ast.Subscript) and isinstance(n.value, ast.Name) \
+                    and n.value.id in refs:
+                return True
+            if isinstance(n, ast.Name) and n.id in tainted:
+                return True
+        return False
+
+    changed = True
+    while changed:
+        changed = False
+        for node in ast.walk(func):
+            if not isinstance(node, ast.Assign):
+                continue
+            if not expr_tainted(node.value):
+                continue
+            for t in node.targets:
+                for n in ast.walk(t):
+                    if isinstance(n, ast.Name) and n.id not in tainted:
+                        tainted.add(n.id)
+                        changed = True
+    return tainted
+
+
+def _is_none_check(test: ast.AST) -> bool:
+    if isinstance(test, ast.Compare) and any(
+            isinstance(op, (ast.Is, ast.IsNot)) for op in test.ops):
+        return True
+    if isinstance(test, ast.BoolOp):
+        return all(_is_none_check(v) for v in test.values)
+    return False
+
+
+def _check_traced_branch(mod: ModuleInfo, out: List[Finding]):
+    for fi in mod.functions:
+        refs = _ref_params(fi.node)
+        if not refs and "program_id" not in fi.callees:
+            continue       # not a kernel body
+        tainted = _tainted_names(fi.node)
+
+        def test_tainted(test: ast.AST) -> bool:
+            for n in ast.walk(test):
+                if isinstance(n, ast.Call) and call_name(n) == "program_id":
+                    return True
+                if isinstance(n, ast.Subscript) \
+                        and isinstance(n.value, ast.Name) \
+                        and n.value.id in refs:
+                    return True
+                if isinstance(n, ast.Name) and n.id in tainted:
+                    return True
+            return False
+
+        for node in ast.walk(fi.node):
+            if not isinstance(node, (ast.If, ast.While)):
+                continue
+            if _is_none_check(node.test):
+                continue   # optional-ref presence check: static
+            if not test_tainted(node.test):
+                continue
+            if mod.allows(node.lineno, "traced-branch", fi.node):
+                continue
+            out.append(Finding(
+                PASS, "traced-branch", mod.rel, node.lineno, fi.qualname,
+                "Python branch on a traced value inside a kernel body — "
+                "tracing either fails or bakes in one side; use pl.when "
+                "(side effects) or jnp.where (values)"))
+
+
+# ---------------------------------------------------------------------------
+# grid-divisibility
+# ---------------------------------------------------------------------------
+
+def _name_of(e: ast.AST) -> str:
+    return e.id if isinstance(e, ast.Name) else ast.dump(e)
+
+
+def _mod_asserts(func: ast.AST) -> Set[tuple]:
+    """(numerator, denominator) name pairs proven by an assert X % b == 0."""
+    out: Set[tuple] = set()
+    for node in ast.walk(func):
+        if not isinstance(node, ast.Assert):
+            continue
+        for n in ast.walk(node.test):
+            if isinstance(n, ast.BinOp) and isinstance(n.op, ast.Mod):
+                out.add((_name_of(n.left), _name_of(n.right)))
+    return out
+
+
+def _padded_names(func: ast.AST) -> Set[str]:
+    """Names produced by a round-up helper (``Mp = _pad_to(M, bm)``) or by
+    the inline ceil idiom ``-(-n // b) * b``."""
+    out: Set[str] = set()
+    for node in ast.walk(func):
+        if not isinstance(node, ast.Assign):
+            continue
+        padded = False
+        for n in ast.walk(node.value):
+            if isinstance(n, ast.Call):
+                name = call_name(n) or ""
+                if any(h in name for h in PAD_HELPERS):
+                    padded = True
+            if isinstance(n, ast.BinOp) and isinstance(n.op, ast.Mult) \
+                    and isinstance(n.left, ast.UnaryOp) \
+                    and isinstance(n.left.op, ast.USub):
+                padded = True
+        if padded:
+            for t in node.targets:
+                if isinstance(t, ast.Tuple):
+                    out.update(e.id for e in t.elts
+                               if isinstance(e, ast.Name))
+                elif isinstance(t, ast.Name):
+                    out.add(t.id)
+    return out
+
+
+def _check_grid(mod: ModuleInfo, out: List[Finding]):
+    for fi in mod.functions:
+        grids = [n for n in ast.walk(fi.node) if isinstance(n, ast.Assign)
+                 and any(isinstance(t, ast.Name) and t.id == "grid"
+                         for t in n.targets)]
+        if not grids:
+            continue
+        proven = _mod_asserts(fi.node)
+        padded = _padded_names(fi.node)
+        for g in grids:
+            for n in ast.walk(g.value):
+                if not (isinstance(n, ast.BinOp)
+                        and isinstance(n.op, ast.FloorDiv)):
+                    continue
+                num, den = _name_of(n.left), _name_of(n.right)
+                if (num, den) in proven or num in padded:
+                    continue
+                if mod.allows(n.lineno, "grid-divisibility", fi.node):
+                    continue
+                out.append(Finding(
+                    PASS, "grid-divisibility", mod.rel, n.lineno,
+                    fi.qualname,
+                    f"grid dimension {num} // {den} without an "
+                    f"`assert {num} % {den} == 0` or a round-up pad of "
+                    f"{num}: a non-divisible shape silently drops the "
+                    "ragged tail"))
+
+
+# ---------------------------------------------------------------------------
+# registry-shapes (executed)
+# ---------------------------------------------------------------------------
+
+def check_registry_shapes() -> List[Finding]:
+    """Divisibility of every registered architecture against the kernel
+    tiling constants. Executed, not AST: the registry is data."""
+    out: List[Finding] = []
+    try:
+        from repro.configs import registry
+    except Exception as e:   # missing heavy deps in a bare lint env
+        out.append(Finding(
+            PASS, "registry-shapes", "configs/registry.py", 1, "",
+            f"could not import the config registry: {e}"))
+        return out
+    for name in registry.ARCH_IDS:
+        for variant, cfg in (("full", registry.get_config(name)),
+                             ("reduced", registry.reduced(
+                                 registry.get_config(name)))):
+            L = cfg.max_seq_len
+            bk = min(DECODE_BLOCK, L)
+            checks = [
+                (L % bk == 0,
+                 f"max_seq_len={L} not divisible by decode block {bk}"),
+                (L % PAGE_SIZE == 0,
+                 f"max_seq_len={L} not divisible by page size "
+                 f"{PAGE_SIZE}"),
+                (cfg.head_dim % LANE_ALIGN == 0,
+                 f"head_dim={cfg.head_dim} not {LANE_ALIGN}-aligned"),
+            ]
+            for ok, msg in checks:
+                if not ok:
+                    out.append(Finding(
+                        PASS, "registry-shapes", "configs/registry.py", 1,
+                        f"{name}:{variant}",
+                        f"{msg} — the Pallas sweep would drop the ragged "
+                        "tail of the cache"))
+    return out
+
+
+def run(ws: Workspace) -> List[Finding]:
+    out: List[Finding] = []
+    for mod in ws.select("kernels"):
+        _check_traced_branch(mod, out)
+        _check_grid(mod, out)
+    out.extend(check_registry_shapes())
+    return out

@@ -18,6 +18,8 @@ import threading
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
+from repro.analysis.lifecycle import sanitizer
+
 MAX_SLOTS = 4  # paper: up to four vFPGAs per physical device
 
 
@@ -91,6 +93,7 @@ class DeviceDB:
         self.nodes: Dict[str, Node] = {}
         self.devices: Dict[str, PhysicalDevice] = {}
         self._slice_counter = 0
+        self._san = sanitizer.scope()    # device-machine key namespace
 
     # ---------------- topology ----------------
     def add_node(self, node_id: str) -> Node:
@@ -197,6 +200,7 @@ class DeviceDB:
                         SliceState.ALLOCATED, owner, service_model,
                         cache_pages=cache_pages)
             dev.slices[vs.slice_id] = vs
+            sanitizer.emit("device", (self._san, dev.device_id), "activate")
             dev.state = DeviceState.ACTIVE
             return vs
 
@@ -210,6 +214,7 @@ class DeviceDB:
             if not cands:
                 raise NoCapacityError("no idle physical device")
             dev = cands[0]
+            sanitizer.emit("device", (self._san, dev.device_id), "exclusive")
             dev.state = DeviceState.EXCLUSIVE
             self._slice_counter += 1
             vs = VSlice(f"vs-{self._slice_counter:05d}", dev.device_id,
@@ -223,6 +228,7 @@ class DeviceDB:
             dev = self.devices[vs.device_id]
             del dev.slices[slice_id]
             if not dev.slices:
+                sanitizer.emit("device", (self._san, dev.device_id), "park")
                 dev.state = DeviceState.PARKED   # energy policy: gate clocks
 
     def set_slice_state(self, slice_id: str, state: SliceState,
@@ -252,6 +258,11 @@ class DeviceDB:
             return self._kill_device(self.devices[device_id])
 
     def _kill_device(self, dev: PhysicalDevice) -> List[VSlice]:
+        if dev.state != DeviceState.DEAD:
+            # guard: a node kill sweeps every device on the node, some of
+            # which may already be individually dead — DEAD is sticky and
+            # re-killing a dead device is not a lifecycle event
+            sanitizer.emit("device", (self._san, dev.device_id), "kill")
         dev.state = DeviceState.DEAD
         orphans = list(dev.slices.values())
         dev.slices = {}

@@ -28,6 +28,19 @@ import random
 from typing import List, Optional, Sequence, Set
 
 
+def seeded_rng(seed: int) -> random.Random:
+    """The one sanctioned constructor for runtime randomness.
+
+    Every RNG in the serving stack must come from here with an explicit
+    seed — the determinism pass (``python -m repro.analysis``) flags any
+    ``random.Random``/``random.*`` use outside this function, so replay
+    guarantees ("same seed, same run") survive refactors. Centralizing
+    construction also gives one place to later swap the generator or log
+    seed derivations.
+    """
+    return random.Random(int(seed))
+
+
 class FakeClock:
     """Injectable monotonic clock. Hand the SAME instance to the
     ``Hypervisor`` (heartbeat deadlines) and the ``FaultInjector`` (which
@@ -68,7 +81,7 @@ class FaultInjector:
     def __init__(self, seed: int = 0, clock: Optional[FakeClock] = None,
                  tick_s: float = 1.0, page_copy_fail_rate: float = 0.0):
         self.seed = seed
-        self.rng = random.Random(seed)
+        self.rng = seeded_rng(seed)
         self.clock = clock if clock is not None else FakeClock()
         self.tick_s = tick_s
         self.page_copy_fail_rate = page_copy_fail_rate

@@ -39,6 +39,7 @@ from typing import Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.analysis.lifecycle import sanitizer
 from repro.core.device_db import DeviceState, SliceState
 from repro.core.elastic import ElasticController
 from repro.core.hypervisor import Hypervisor
@@ -47,13 +48,14 @@ from repro.runtime.faults import FaultInjector
 from repro.runtime.gateway import (TenantSession, settle_finished_request,
                                    validate_submit)
 from repro.runtime.paged import default_pool_pages
-from repro.runtime.serve import (BatchingEngine, Request,
+from repro.runtime.serve import (BatchingEngine, Request, _req_event,
                                  make_paged_serve_step, make_serve_step)
 
 
 def _mark_cancelled(req: Request) -> None:
     """Stamp a request cancelled outside any engine (caught in transit
     between engines, or torn down with an evicted session)."""
+    _req_event(req, "cancel")
     req.finish_reason = "cancelled"
     req.finished_at = time.monotonic()
     req.done.set()
@@ -120,6 +122,7 @@ class GatewayFleet:
         # dead device's engine (queues, slots, KV pages) is gone, but the
         # journal re-creates its traffic by prefix replay elsewhere.
         self.journal: Dict[int, JournalEntry] = {}
+        self._san = sanitizer.scope()    # journal-machine key namespace
         self.recoveries: List[dict] = []
         # one id stream for the whole fleet: request ids must stay unique
         # across engines (audit log + hand-off both key on them)
@@ -254,7 +257,9 @@ class GatewayFleet:
         engine = self._engines.get(dev)
         if engine is not None:
             for r in engine.cancel_queued(tenant):
-                self.journal.pop(r.request_id, None)
+                if self.journal.pop(r.request_id, None) is not None:
+                    sanitizer.emit("journal",
+                                   (self._san, r.request_id), "retire")
             engine.set_tenant_share(tenant, None)
             engine.set_tenant_pages(tenant, None)
         self._settle_outstanding(sess)
@@ -292,9 +297,18 @@ class GatewayFleet:
         self.hv.admit_serving_request(sess.slice_id, len(prompt),
                                       max_new_tokens)
         sess.submitted += 1
-        req = self.engine_for(tenant).submit(prompt, max_new_tokens,
-                                             tenant=tenant)
+        try:
+            req = self.engine_for(tenant).submit(prompt, max_new_tokens,
+                                                 tenant=tenant)
+        except Exception:
+            # an engine rejection (oversized request, paged worst-case
+            # check) must hand back the quota charged two lines up, or the
+            # tenant's in-flight count leaks one slot per failed submit
+            sess.submitted -= 1
+            self.hv.admission.finish_request(tenant, sess.service_model)
+            raise
         req._session = sess
+        sanitizer.emit("journal", (self._san, req.request_id), "append")
         self.journal[req.request_id] = JournalEntry(req, tenant)
         return req
 
@@ -393,7 +407,9 @@ class GatewayFleet:
     def _on_finish(self, req: Request):
         # retire the journal entry FIRST: a settled request must never be
         # replayed by a later recovery (exactly-once accounting)
-        self.journal.pop(req.request_id, None)
+        if self.journal.pop(req.request_id, None) is not None:
+            sanitizer.emit("journal",
+                           (self._san, req.request_id), "retire")
         settle_finished_request(self.hv, self._sessions, req)
 
     # ------------------------------------------------------------------
@@ -516,6 +532,12 @@ class GatewayFleet:
                  "evicted": []}
         for tenant in tenants:
             sess = self._sessions[tenant]
+            # every unfinished request of this tenant was stranded by the
+            # crash — queued or mid-decode, it is now an orphan awaiting
+            # either replay (below) or eviction
+            for entry in self.journal.values():
+                if entry.tenant == tenant and not entry.req.done.is_set():
+                    _req_event(entry.req, "orphan")
             # the grant formula rides along so each degrade step asks for
             # the page grant matching ITS slot count, not the original's
             vs = self.elastic.place_failover(
@@ -548,6 +570,8 @@ class GatewayFleet:
                 # journaled token log (tokens past it regenerate bit-exact
                 # under greedy decoding — the chaos suite proves it)
                 entry.req.out_tokens = list(entry.tokens)
+                sanitizer.emit("journal",
+                               (self._san, entry.req.request_id), "replay")
                 target.resume(entry.req)
                 event["resumed"] += 1
         self.recoveries.append(event)
@@ -566,6 +590,7 @@ class GatewayFleet:
             if entry.tenant != tenant or entry.req.done.is_set():
                 continue
             del self.journal[rid]
+            sanitizer.emit("journal", (self._san, rid), "retire")
             _mark_cancelled(entry.req)
             cancelled += 1
         self._settle_outstanding(sess)

@@ -157,17 +157,24 @@ class ServingGateway:
         vs = self.hv.open_serving_session(
             tenant, slots, service_model,
             cache_pages=self._session_page_grant(slots))
-        # bind the shared decode program to this tenant's slice (PR swap —
-        # a cache hit, microseconds; slice goes ALLOCATED -> CONFIGURED)
-        self.hv.program_slice(vs.slice_id, self._decode_fn, self._example,
-                              static_desc=self._desc)
-        # slice-aware scheduling: a k-slot vSlice may hold k engine slots
-        self.engine.set_tenant_share(tenant, slots)
-        if self.paged:
-            # memory-aware scheduling: the engine's admission gate queues
-            # the tenant once it holds its vSlice page grant (hv already
-            # clamped it to the service model's page quota)
-            self.engine.set_tenant_pages(tenant, vs.cache_pages or None)
+        try:
+            # bind the shared decode program to this tenant's slice (PR
+            # swap — cache hit, microseconds; ALLOCATED -> CONFIGURED)
+            self.hv.program_slice(vs.slice_id, self._decode_fn,
+                                  self._example, static_desc=self._desc)
+            # slice-aware scheduling: a k-slot vSlice holds k engine slots
+            self.engine.set_tenant_share(tenant, slots)
+            if self.paged:
+                # memory-aware scheduling: the engine's admission gate
+                # queues the tenant once it holds its vSlice page grant
+                # (hv already clamped it to the service model's quota)
+                self.engine.set_tenant_pages(tenant, vs.cache_pages or None)
+        except Exception:
+            # a failed bind must hand back the slice AND the tenant's
+            # admission charge, or the tenant is stranded admitted against
+            # a slice it can never decode on
+            self.hv.close_serving_session(vs.slice_id)
+            raise
         sess = TenantSession(tenant, vs.slice_id, slots, service_model)
         self._sessions[tenant] = sess
         return sess
@@ -207,7 +214,14 @@ class ServingGateway:
         self.hv.admit_serving_request(sess.slice_id, len(prompt),
                                       max_new_tokens)
         sess.submitted += 1
-        req = self.engine.submit(prompt, max_new_tokens, tenant=tenant)
+        try:
+            req = self.engine.submit(prompt, max_new_tokens, tenant=tenant)
+        except Exception:
+            # an engine rejection (oversized request, paged worst-case
+            # check) must hand back the quota charged two lines up
+            sess.submitted -= 1
+            self.hv.admission.finish_request(tenant, sess.service_model)
+            raise
         # stamp the session identity: if the session is closed and reopened
         # while this request still decodes, the orphan must not be
         # attributed (or quota-settled) against the new session

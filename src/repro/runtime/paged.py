@@ -28,6 +28,8 @@ from typing import Dict, Hashable, List, Optional, Tuple
 
 import numpy as np
 
+from repro.analysis.lifecycle import sanitizer
+
 
 class NoPagesError(RuntimeError):
     """Internal guard: the engine must pre-check ``pages_needed`` /
@@ -78,6 +80,11 @@ class PagePoolManager:
         self._page_key: Dict[int, Hashable] = {}     # page -> its key
         self.prefix_hits = 0
         self.cow_copies = 0
+        # bumped on every block-table mutation: the engine keys its cached
+        # device copy of the tables on this, so steady-state decode skips
+        # the per-step host->device re-upload
+        self.version = 0
+        self._san = sanitizer.scope()   # namespaces this pool's page keys
 
     # ---------------- occupancy ----------------
     @property
@@ -111,12 +118,15 @@ class PagePoolManager:
         if not self._free:
             raise NoPagesError("page pool exhausted")
         pid = self._free.pop()
+        sanitizer.emit("page", (self._san, pid), "alloc")
         self._ref[pid] = 1
         self._owner[pid] = tenant
         self._tenant_pages[tenant] = self._tenant_pages.get(tenant, 0) + 1
         return pid
 
     def _decref(self, pid: int):
+        sanitizer.emit("page", (self._san, pid),
+                       "free" if self._ref[pid] == 1 else "unshare")
         self._ref[pid] -= 1
         if self._ref[pid] == 0:
             key = self._page_key.pop(pid, None)
@@ -203,6 +213,7 @@ class PagePoolManager:
                              f"table has {self.max_blocks}")
         shared = self._match(tenant, toks)[0] if share else []
         for pid in shared:
+            sanitizer.emit("page", (self._san, pid), "share")
             self._ref[pid] += 1
             self.prefix_hits += 1
         fresh: List[int] = []
@@ -221,6 +232,7 @@ class PagePoolManager:
         self.block_tables[slot, :] = 0
         self.block_tables[slot, :total] = blocks
         self._slot_pages[slot] = list(blocks)
+        self.version += 1
         if share:
             # register what this request will write: content-complete full
             # blocks, plus its tail page (exact content) if it owns one
@@ -243,6 +255,7 @@ class PagePoolManager:
         bi = len(self._slot_pages[slot])
         self.block_tables[slot, bi] = pid
         self._slot_pages[slot].append(pid)
+        self.version += 1
         return pid
 
     # ---------------- copy-on-write ----------------
@@ -255,10 +268,12 @@ class PagePoolManager:
         (src, dst); the engine performs the actual device copy."""
         src = self._slot_pages[slot][block]
         dst = self._alloc_one(tenant)
+        sanitizer.emit("page", (self._san, src), "unshare")
         self._ref[src] -= 1          # still > 0: another slot holds it
         self._slot_pages[slot][block] = dst
         self.block_tables[slot, block] = dst
         self.cow_copies += 1
+        self.version += 1
         return src, dst
 
     def touch_write(self, slot: int, block: int):
@@ -278,6 +293,7 @@ class PagePoolManager:
             self._decref(pid)
         self._slot_pages[slot] = []
         self.block_tables[slot, :] = 0
+        self.version += 1
 
     # ---------------- invariants ----------------
     def verify(self) -> None:
@@ -300,7 +316,9 @@ class PagePoolManager:
         assert len(free_set) == len(self._free), "free-list duplicate " \
             "(double-free)"
         assert 0 not in free_set, "null page on the free list"
-        for pid in free_set:
+        # iterate the free LIST, not the set: set order is salted per
+        # process and would make any failure message non-reproducible
+        for pid in self._free:
             assert self._ref[pid] == 0, f"free page {pid} has refcount " \
                 f"{self._ref[pid]}"
         referenced = [p for p in range(1, self.n_pages) if self._ref[p] > 0]

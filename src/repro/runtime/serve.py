@@ -19,6 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.analysis.lifecycle import sanitizer
 from repro.configs.base import ModelConfig
 from repro.models.api import Model
 from repro.runtime.paged import PagePoolManager, default_pool_pages
@@ -130,6 +131,17 @@ def _copy_page(pool, src, dst):
     return jax.tree.map(lambda a: a.at[:, dst].set(a[:, src]), pool)
 
 
+@jax.jit
+def _argmax_tokens(logits):
+    """Greedy sampling ON DEVICE: reduce (n_slots, 1, vocab) logits to
+    (n_slots,) int32 token ids before they cross to the host. The engine
+    step loop used to pull the full logits tensor host-side and argmax in
+    numpy — a vocab-sized D2H transfer per decode step (n_slots * vocab *
+    4 bytes, ~0.5 MB at vocab 32k / 4 slots) for 4 bytes of answer per
+    slot."""
+    return jnp.argmax(logits[:, 0, :], axis=-1).astype(jnp.int32)
+
+
 @functools.partial(jax.jit, donate_argnums=(0,))
 def _import_pages(pool, payload, pages):
     """Scatter a migrated request's page payload (leaves (L, nb, ps, ...))
@@ -151,6 +163,17 @@ class Request:
     first_token_at: Optional[float] = None
     finished_at: Optional[float] = None
     finish_reason: Optional[str] = None   # "eos" | "length" | "cancelled"
+
+
+def _req_event(req: Request, event: str) -> None:
+    """Drive the request lifecycle machine (RC3E_SANITIZE=1). Keyed by the
+    per-request ``scope()`` token stamped at submit time — NOT request_id,
+    which is only unique within one id_counter (standalone engines each
+    start at 0) — so the key travels with the object across a live
+    hand-off between engines."""
+    tok = getattr(req, "_san", None)
+    if tok is not None:
+        sanitizer.emit("request", tok, event)
 
 
 class BatchingEngine:
@@ -218,6 +241,12 @@ class BatchingEngine:
         self._slots: List[Optional[Request]] = [None] * n_slots
         self.steps = 0
         self.preemptions = 0
+        self._scope = sanitizer.scope()      # slot-machine key namespace
+        # device block-table cache, keyed on the pool's version counter:
+        # steady-state decode steps reuse it instead of re-uploading the
+        # (n_slots, max_blocks) table every token
+        self._bt_cache = None
+        self._bt_version = -1
         if paged:
             if model.cfg.mla is not None:
                 raise ValueError("paged KV caches support plain-attention "
@@ -304,6 +333,9 @@ class BatchingEngine:
                     f"request may need {worst} pages, pool has only "
                     f"{self.pool.total_pages} — it could never be admitted")
         req = Request(next(self._ids), prompt, max_new_tokens, tenant=tenant)
+        if sanitizer.enabled:
+            req._san = sanitizer.scope()
+            _req_event(req, "submit")
         with self._qlock:
             self._queues.setdefault(tenant,
                                     collections.deque()).append(req)
@@ -321,6 +353,7 @@ class BatchingEngine:
         settle its quota twice, so it is dropped here."""
         if req.done.is_set():
             return req
+        _req_event(req, "requeue")
         with self._qlock:
             q = self._queues.setdefault(req.tenant, collections.deque())
             if front:
@@ -341,6 +374,7 @@ class BatchingEngine:
         session closed). Returns the cancelled requests, marked done."""
         dropped = self._drain_queue(tenant)
         for r in dropped:
+            _req_event(r, "cancel")
             r.finish_reason = "cancelled"
             r.finished_at = time.monotonic()
             r.done.set()
@@ -373,6 +407,7 @@ class BatchingEngine:
         return False
 
     def _finish(self, req: Request, reason: str):
+        _req_event(req, "cancel" if reason == "cancelled" else "finish")
         req.finish_reason = reason
         req.finished_at = time.monotonic()
         req.done.set()
@@ -381,6 +416,7 @@ class BatchingEngine:
 
     def _release_slot(self, slot: int):
         """Free a slot (and its pool pages) without touching the request."""
+        sanitizer.emit("slot", (self._scope, slot), "release")
         self._slots[slot] = None
         self._pos[slot] = -1 if self.paged else 0
         if self.paged:
@@ -396,6 +432,7 @@ class BatchingEngine:
         moved: List[Request] = []
         for i, r in enumerate(self._slots):
             if r is not None and r.tenant == tenant:
+                _req_event(r, "drain")
                 self._release_slot(i)
                 moved.append(r)
         moved.extend(self._drain_queue(tenant))
@@ -426,8 +463,10 @@ class BatchingEngine:
         must cover (the final token seeds the next decode step)."""
         if not req.out_tokens:
             return req.prompt
+        # admission-time list->array conversion, not per-decode-step
         return np.concatenate(
-            [req.prompt, np.asarray(req.out_tokens, np.int32)])
+            [req.prompt,
+             np.asarray(req.out_tokens, np.int32)])  # rc3e: allow-host-sync
 
     def _page_budget_ok(self, tenant: str, extra: int) -> bool:
         budget = self._tenant_pages.get(tenant)
@@ -481,6 +520,8 @@ class BatchingEngine:
             if req is None:
                 return
             self._slots[slot] = req
+            sanitizer.emit("slot", (self._scope, slot), "occupy")
+            _req_event(req, "admit")
             # a request resumed after live migration replays prompt +
             # already-generated tokens so decode continues where it left off
             toks = self._ctx_tokens(req)
@@ -532,7 +573,10 @@ class BatchingEngine:
         slot's pool pages (shared prefix pages already hold identical
         content — that's the point of sharing them)."""
         _, slot_caches = self._prefill(self.params, self._pad_ctx(ctx))
-        pages = jnp.asarray(np.asarray(plan.write_pages, np.int32))
+        # admission-time upload of the write-page index vector
+        pages = jnp.asarray(                         # rc3e: allow-host-sync
+            np.asarray(plan.write_pages,             # rc3e: allow-host-sync
+                       np.int32))
         self.caches = _splice_pages(self.caches, slot_caches, pages,
                                     start=plan.write_start)
 
@@ -544,9 +588,25 @@ class BatchingEngine:
         pad = max(n, min(bucket, self._min_cache_len))
         toks = np.zeros((1, pad), np.int32)
         toks[0, :n] = ctx
-        return jnp.asarray(toks)
+        # prefill prompt upload: once per admission, not per step
+        return jnp.asarray(toks)                     # rc3e: allow-host-sync
+
+    def _block_tables_dev(self):
+        """Device copy of the pool block tables, re-uploaded only when the
+        pool's ``version`` counter moved (bumped on every admit/grow/cow/
+        release). Steady-state decode steps — no admission, no growth —
+        reuse the cached array instead of paying an H2D transfer of the
+        whole (n_slots, max_blocks) table per generated token."""
+        if self._bt_version != self.pool.version:
+            self._bt_cache = jnp.asarray(            # rc3e: allow-host-sync
+                self.pool.block_tables)
+            self._bt_version = self.pool.version
+        return self._bt_cache
 
     def _step_single(self, slot: int, token: int, pos: int):
+        """Replay ONE context token through the decode program (short or
+        legacy-mode prefill). The logits are deliberately dropped on
+        device — only the cache writes matter here."""
         tokens = np.zeros((self.n_slots, 1), np.int32)
         tokens[slot, 0] = token
         if self.paged:
@@ -554,16 +614,18 @@ class BatchingEngine:
             # null page instead of garbling a possibly-shared write page
             posv = np.full((self.n_slots,), -1, np.int32)
             posv[slot] = pos
-            logits, self.caches = self._decode(
-                self.params, self.caches, jnp.asarray(tokens),
-                jnp.asarray(posv), jnp.asarray(self.pool.block_tables))
+            _, self.caches = self._decode(
+                self.params, self.caches,
+                jnp.asarray(tokens),                 # rc3e: allow-host-sync
+                jnp.asarray(posv),                   # rc3e: allow-host-sync
+                self._block_tables_dev())
         else:
             posv = self._pos.copy()
             posv[slot] = pos
-            logits, self.caches = self._decode(
-                self.params, self.caches, jnp.asarray(tokens),
-                jnp.asarray(posv))
-        return np.asarray(logits)
+            _, self.caches = self._decode(
+                self.params, self.caches,
+                jnp.asarray(tokens),                 # rc3e: allow-host-sync
+                jnp.asarray(posv))                   # rc3e: allow-host-sync
 
     def _prepare_writes(self):
         """Before a paged decode step: every active slot's write position
@@ -597,6 +659,7 @@ class BatchingEngine:
 
     def _preempt(self, slot: int):
         req = self._slots[slot]
+        _req_event(req, "preempt")
         self._release_slot(slot)
         self.resume(req, front=True)
         self.preemptions += 1
@@ -614,23 +677,31 @@ class BatchingEngine:
         for i in active:
             tokens[i, 0] = self._slots[i]._next_input
         t0 = time.monotonic()
+        # the two small per-step uploads ((n_slots, 1) tokens and
+        # (n_slots,) positions) are the step's inputs — unavoidable and
+        # tiny; the block tables are served from the version-keyed cache
         if self.paged:
             logits, self.caches = self._decode(
-                self.params, self.caches, jnp.asarray(tokens),
-                jnp.asarray(self._pos),
-                jnp.asarray(self.pool.block_tables))
+                self.params, self.caches,
+                jnp.asarray(tokens),                 # rc3e: allow-host-sync
+                jnp.asarray(self._pos),              # rc3e: allow-host-sync
+                self._block_tables_dev())
         else:
             logits, self.caches = self._decode(
-                self.params, self.caches, jnp.asarray(tokens),
-                jnp.asarray(self._pos))
-        logits = np.asarray(logits)
+                self.params, self.caches,
+                jnp.asarray(tokens),                 # rc3e: allow-host-sync
+                jnp.asarray(self._pos))              # rc3e: allow-host-sync
+        # argmax on device: fetch (n_slots,) int32 ids, not the full
+        # (n_slots, 1, vocab) logits tensor
+        next_ids = np.asarray(                       # rc3e: allow-host-sync
+            _argmax_tokens(logits))
         step_ms = (time.monotonic() - t0) * 1e3
         self.steps += 1
         if self.on_step is not None:
             self.on_step(self.active_by_tenant(), step_ms)
         for i in active:
             req = self._slots[i]
-            nxt = int(np.argmax(logits[i, 0]))
+            nxt = int(next_ids[i])
             if req.first_token_at is None:
                 req.first_token_at = time.monotonic()
             req.out_tokens.append(nxt)
@@ -708,6 +779,8 @@ class BatchingEngine:
             jnp.asarray(np.asarray(pages, np.int32)))
         toks = self._ctx_tokens(req)
         self._slots[slot] = req
+        sanitizer.emit("slot", (self._scope, slot), "occupy")
+        _req_event(req, "adopt")
         self._pos[slot] = len(toks) - 1
         req._next_input = int(toks[-1])
         return True

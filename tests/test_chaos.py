@@ -18,6 +18,7 @@ import jax
 import numpy as np
 import pytest
 
+from repro.analysis import sanitizer
 from repro.configs import get_config, reduced
 from repro.core import ClusterSpec, DeviceState, Hypervisor, MonitorConfig
 from repro.models import get_model
@@ -26,6 +27,15 @@ from repro.runtime.faults import FakeClock
 
 SEEDS = [int(s) for s in
          os.environ.get("CHAOS_SEEDS", "0,1,2,3,4").split(",") if s.strip()]
+
+
+@pytest.fixture(autouse=True)
+def _sanitizer_reset():
+    """Per-test sanitizer state: scope tokens are never reused, so clearing
+    tracked objects between tests cannot alias a new fleet with an old one;
+    it only keeps the per-run transition counts honest."""
+    sanitizer.reset()
+    yield
 
 N_TENANTS = 6          # 2 slots each -> 3 active devices + 1 parked spare
 REQS_PER_TENANT = 2
@@ -89,6 +99,12 @@ def _run_workload(cfg, model, params, injector=None, max_steps=400):
         if f"t{ti}" in fleet._sessions:
             assert hv.admission.usage(f"t{ti}")["inflight"] == 0
     assert set(hv.monitor.page_occupancy()) <= set(fleet._engines)
+    if sanitizer.enabled:
+        # the run exercised (and the sanitizer checked) every lifecycle
+        # machine: requests, engine slots, pool pages, journal entries and
+        # physical devices all made legal transitions only
+        active = {m for m, n in sanitizer.stats().items() if n}
+        assert {"request", "slot", "page", "journal", "device"} <= active
     tokens = {k: list(r.out_tokens) for k, r in reqs.items()}
     return tokens, reqs, hv, fleet
 
