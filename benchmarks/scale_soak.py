@@ -1,0 +1,179 @@
+"""Open-loop scale soak: replay synthesized traffic traces against the
+serving fleet and persist per-cell records to ``BENCH_scale.json``.
+
+Each cell of the matrix is one ``(trace spec, fleet spec, seed)`` triple
+replayed by ``repro.runtime.loadgen.replay_trace``: Poisson-burst arrival
+waves with diurnal modulation, lognormal request sizes and Zipf tenant
+skew, driven open-loop against a ``GatewayFleet`` on the injected
+``FakeClock``. A full (non ``--smoke``) run is the STANDING SOAK MATRIX:
+chaos seeds × trace specs × fleet sizes, every cell with a seeded
+mixed-fault schedule (device kill + transient partition) and an
+invariant check (``verify_invariants`` — quota/journal conservation and
+``PagePoolManager.verify``) before its record is accepted.
+
+Records contain no wall-clock values — goodput is tokens per fleet
+*round* and latency is measured in rounds — so the file is a pure
+function of the matrix and is diffable across hosts. That is what makes
+the committed baseline (``benchmarks/BENCH_scale_baseline.json``) a
+usable CI regression gate: ``--check`` fails when any cell's goodput
+drops more than 10% below the baseline's.
+
+Run:
+  PYTHONPATH=src python benchmarks/scale_soak.py --smoke \
+      --out BENCH_scale.json --check benchmarks/BENCH_scale_baseline.json
+  PYTHONPATH=src python benchmarks/scale_soak.py --seeds 0,1,2   # full soak
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BASELINE = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        "BENCH_scale_baseline.json")
+GOODPUT_DROP_TOLERANCE = 0.10
+
+
+def _setup():
+    import jax
+    from repro.configs import get_config, reduced
+    from repro.models import get_model
+    cfg = reduced(get_config("smollm-135m")).replace(dtype="float32")
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _cell_key(rec: dict) -> str:
+    c = rec["cell"]
+    chaos = "+chaos" if c.get("chaos") else ""
+    return f"{c['trace']}|{c['fleet']}|{c['seed']}{chaos}"
+
+
+def run_matrix(smoke: bool, seeds, chaos: bool, progress=None):
+    """Replay the matrix; returns its records (no wall-clock inside)."""
+    from repro.runtime.loadgen import (SoakMatrix, preset_fleets,
+                                       preset_traces, smoke_cell)
+    _, model, params = _setup()
+    if smoke:
+        trace, fleet, seed = smoke_cell()
+        matrix = SoakMatrix([trace], [fleet], [seed], chaos=False)
+    else:
+        matrix = SoakMatrix(preset_traces(), preset_fleets(), list(seeds),
+                            chaos=chaos)
+    from repro.core.reconfig import ProgramCache, Reconfigurator
+    reconfig = Reconfigurator(ProgramCache())   # shared PR cache: cells
+    return matrix.run(model, params, reconfig=reconfig,  # after the first
+                      progress=progress)                 # hit, not miss
+
+
+def check_regression(records, baseline_path: str,
+                     tolerance: float = GOODPUT_DROP_TOLERANCE):
+    """Compare per-cell goodput against a committed baseline. Returns the
+    list of failure strings (empty == pass). Cells absent from the
+    baseline are skipped — adding matrix cells must not fail CI."""
+    with open(baseline_path) as f:
+        base = {_cell_key(r): r["metrics"]["goodput_tokens_per_round"]
+                for r in json.load(f)["records"]}
+    failures = []
+    for rec in records:
+        key = _cell_key(rec)
+        if key not in base:
+            continue
+        got = rec["metrics"]["goodput_tokens_per_round"]
+        floor = (1.0 - tolerance) * base[key]
+        if got < floor:
+            failures.append(
+                f"{key}: goodput {got:.4f} < {floor:.4f} "
+                f"(baseline {base[key]:.4f}, tolerance {tolerance:.0%})")
+    return failures
+
+
+def write_records(records, path: str):
+    with open(path, "w") as f:
+        json.dump({"records": records}, f, indent=1, sort_keys=True)
+        f.write("\n")
+
+
+def run():
+    """benchmarks/run.py protocol: replay the pinned smoke cell, emit
+    (name, value, derived) rows."""
+    records = run_matrix(smoke=True, seeds=[0], chaos=False)
+    m = records[0]["metrics"]
+    lat = m["latency_rounds"]
+    return [
+        ("scale_soak.smoke.goodput_tok_per_round",
+         m["goodput_tokens_per_round"],
+         f"completed={m['completed']}/{m['arrivals']}"),
+        ("scale_soak.smoke.p95_latency_rounds", float(lat["p95"]),
+         f"p50={lat['p50']};p99={lat['p99']}"),
+        ("scale_soak.smoke.energy_device_steps",
+         m["energy_device_steps"],
+         f"peak_devices={m['peak_active_devices']}"),
+    ]
+
+
+def main() -> int:
+    sys.path.insert(0, _ROOT)
+    sys.path.insert(0, os.path.join(_ROOT, "src"))
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="replay only the pinned smoke cell (CI)")
+    ap.add_argument("--seeds", default="0,1,2",
+                    help="comma-separated chaos seeds for the full matrix")
+    ap.add_argument("--no-chaos", action="store_true",
+                    help="disable the per-cell fault schedule")
+    ap.add_argument("--out", default="BENCH_scale.json",
+                    help="where to write the records")
+    ap.add_argument("--check", nargs="?", const=BASELINE, default=None,
+                    metavar="BASELINE",
+                    help="fail if any cell's goodput drops >10%% below "
+                         "this baseline (default: the committed one)")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="replay the smoke cell AND the full matrix and "
+                         "write both to the committed baseline path")
+    args = ap.parse_args()
+
+    seeds = [int(s) for s in args.seeds.split(",") if s.strip() != ""]
+    t0 = time.perf_counter()
+
+    def progress(rec):
+        m = rec["metrics"]
+        print(f"  {_cell_key(rec):32s} goodput="
+              f"{m['goodput_tokens_per_round']:.3f} "
+              f"p95={m['latency_rounds']['p95']} "
+              f"completed={m['completed']}/{m['arrivals']} "
+              f"evict={m['evictions']} energy={m['energy_device_steps']}",
+              flush=True)
+
+    if args.write_baseline:
+        records = (run_matrix(smoke=True, seeds=seeds, chaos=False,
+                              progress=progress)
+                   + run_matrix(smoke=False, seeds=seeds,
+                                chaos=not args.no_chaos,
+                                progress=progress))
+        write_records(records, BASELINE)
+        print(f"baseline ({len(records)} cells) -> {BASELINE}")
+        return 0
+    records = run_matrix(smoke=args.smoke, seeds=seeds,
+                         chaos=not args.no_chaos, progress=progress)
+    write_records(records, args.out)
+    print(f"{len(records)} cell(s) -> {args.out} "
+          f"({time.perf_counter() - t0:.1f}s host wall)")
+
+    if args.check:
+        failures = check_regression(records, args.check)
+        if failures:
+            print("GOODPUT REGRESSION:", file=sys.stderr)
+            for line in failures:
+                print("  " + line, file=sys.stderr)
+            return 1
+        print(f"regression check vs {args.check}: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -64,6 +64,11 @@ class PhysicalDevice:
     state: DeviceState = DeviceState.PARKED
     slices: Dict[str, VSlice] = field(default_factory=dict)
     cache_pages: int = 0               # pool pages this device's HBM holds
+    # relative power draw while un-parked (PARKED = clock-gated = free).
+    # Heterogeneous fleets give device classes different draws; the energy
+    # metric (device-steps x draw) and the scale-in policy ("park the
+    # power-hungry devices first") both read it.
+    draw: float = 1.0
 
     def used_slots(self) -> int:
         return sum(s.slots for s in self.slices.values()
@@ -105,14 +110,14 @@ class DeviceDB:
             return n
 
     def add_device(self, device_id: str, node_id: str, chips: int = 256,
-                   cache_pages: int = 0):
+                   cache_pages: int = 0, draw: float = 1.0):
         with self._lock:
             if device_id in self.devices:
                 raise ValueError(f"device {device_id} exists")
             if node_id not in self.nodes:
                 raise KeyError(f"no node {node_id}")
             d = PhysicalDevice(device_id, node_id, chips,
-                               cache_pages=cache_pages)
+                               cache_pages=cache_pages, draw=draw)
             self.devices[device_id] = d
             self.nodes[node_id].devices.append(device_id)
             return d
@@ -141,6 +146,18 @@ class DeviceDB:
         (the memory-dimension twin of ``utilization``)."""
         return {d.device_id: d.granted_cache_pages() / d.cache_pages
                 for d in self.devices.values() if d.cache_pages}
+
+    def active_draw(self) -> float:
+        """Aggregate power draw of every un-parked, alive device this
+        instant. PARKED devices are clock-gated (paper's energy policy)
+        and DEAD ones draw nothing; everything else — ACTIVE, EXCLUSIVE,
+        DRAINING — burns its class draw. The scale harness integrates this
+        over fleet steps into the energy metric (device-steps x draw)."""
+        with self._lock:
+            return sum(d.draw for d in self.devices.values()
+                       if d.state not in (DeviceState.PARKED,
+                                          DeviceState.DEAD)
+                       and self.nodes[d.node_id].alive)
 
     # ---------------- allocation ----------------
     def _alive_devices(self):

@@ -64,6 +64,55 @@ class ElasticController:
             self.hv._log("elastic_scale_out", slice=new.slice_id, device=dev)
         return new
 
+    # ------------------------------------------------------------------
+    # SLO-projection scaling (open-loop traffic: act on the trend, not
+    # the backlog — by the time queue depth trips, the p95 is already
+    # blown through a burst wave)
+    # ------------------------------------------------------------------
+    def _active_serving_devices(self) -> int:
+        return len([d for d in self.hv.db.alive_devices()
+                    if d.state in (DeviceState.ACTIVE,
+                                   DeviceState.EXCLUSIVE)])
+
+    def projected_p95_steps(self, backlog: int,
+                            horizon: int = 16) -> Optional[float]:
+        """Projected p95 request sojourn (in fleet steps) one ``horizon``
+        from now, from the monitor's arrival-rate/service-rate trend.
+
+        Fluid queueing estimate: a request arriving at the end of the
+        horizon waits behind today's backlog plus the horizon's expected
+        arrivals, all draining through the active fleet's measured service
+        capacity — ``(backlog + λ·horizon) / (μ_dev · n_active)``. When
+        λ exceeds capacity the estimate grows linearly in the horizon,
+        which is exactly the divergence the autoscaler must act on.
+        Returns None until the monitor has a usable trend (no samples yet,
+        or nothing served so far)."""
+        lam = self.hv.monitor.arrival_rate()
+        mu_dev = self.hv.monitor.service_rate_per_device()
+        if lam is None or mu_dev is None or mu_dev <= 0.0:
+            return None
+        mu_total = mu_dev * max(1, self._active_serving_devices())
+        return (backlog + lam * horizon) / mu_total
+
+    def scale_out_on_slo(self, slice_id: str, slo_p95_steps: float,
+                         backlog: int, horizon: int = 16
+                         ) -> Optional[VSlice]:
+        """Wake a PARKED device when the *projected* p95 breaches the SLO
+        — queue depth and page pressure are lagging signals; the trend
+        fires while the burst is still arriving. ``slice_id`` is the slice
+        worth moving (the fleet passes its deepest-queued tenant's).
+        Returns the new slice, or None when the projection is under SLO
+        (or unavailable) or no parked capacity exists."""
+        projected = self.projected_p95_steps(backlog, horizon)
+        if projected is None or projected <= slo_p95_steps:
+            return None
+        new = self.scale_out(slice_id)
+        if new is not None:
+            self.hv._log("elastic_slo_scale_out", slice=slice_id,
+                         new_slice=new.slice_id, projected_p95=projected,
+                         slo_p95=slo_p95_steps, backlog=backlog)
+        return new
+
     def scale_out_on_page_pressure(self, hottest_slice_of: dict,
                                    threshold: float = 0.85
                                    ) -> Optional[VSlice]:
@@ -97,24 +146,60 @@ class ElasticController:
         WITHOUT migrating anything — no tenant pays a live hand-off for a
         device that cannot actually empty.
         """
+        if not self.drain_feasible(device_id):
+            return False
         dev = self.hv.db.device(device_id)
         slices = sorted(dev.slices.values(), key=lambda s: -s.slots)
-        free = {d.device_id: d.free_slots()
-                for d in self.hv.db.alive_devices()
-                if d.device_id != device_id
-                and d.state != DeviceState.EXCLUSIVE}
-        for s in slices:
-            # mirror the allocator's pack-first order (fewest free first)
-            fits = sorted((k for k, v in free.items() if v >= s.slots),
-                          key=lambda k: (free[k], k))
-            if not fits:
-                return False
-            free[fits[0]] -= s.slots
         for s in slices:
             if self.hv.migrate_slice(s.slice_id, reason="scale_in") is None:
                 return False    # capacity changed under us mid-drain
         self.hv._log("elastic_scale_in", device=device_id)
         return True
+
+    def drain_feasible(self, device_id: str) -> bool:
+        """Dry-run the ``consolidate`` placement: can every slice this
+        device hosts fit onto the rest of the alive fleet (largest first,
+        mirroring the allocator's pack-first order, honoring page grants
+        on metered clusters)? No state is touched."""
+        dev = self.hv.db.device(device_id)
+        slices = sorted(dev.slices.values(), key=lambda s: -s.slots)
+        others = [d for d in self.hv.db.alive_devices()
+                  if d.device_id != device_id
+                  and d.state != DeviceState.EXCLUSIVE]
+        free = {d.device_id: d.free_slots() for d in others}
+        free_pages = {d.device_id:
+                      (d.cache_pages - d.granted_cache_pages()
+                       if d.cache_pages else None) for d in others}
+        for s in slices:
+            # mirror the allocator's pack-first order (fewest free first)
+            fits = sorted((k for k, v in free.items()
+                           if v >= s.slots
+                           and (not s.cache_pages or free_pages[k] is None
+                                or free_pages[k] >= s.cache_pages)),
+                          key=lambda k: (free[k], k))
+            if not fits:
+                return False
+            free[fits[0]] -= s.slots
+            if s.cache_pages and free_pages[fits[0]] is not None:
+                free_pages[fits[0]] -= s.cache_pages
+        return True
+
+    def pick_scale_in_device(self, min_active: int = 1) -> Optional[str]:
+        """The device to drain when the fleet is over-provisioned: among
+        ACTIVE slice-hosting devices, the highest-draw one whose slices
+        can actually be re-packed elsewhere (dry-run) — the power-hungry
+        device classes park first, completing the energy policy under a
+        diurnal down-ramp. Keeps at least ``min_active`` serving devices.
+        Returns the device id, or None when nothing can (or should)
+        drain."""
+        active = [d for d in self.hv.db.alive_devices()
+                  if d.state == DeviceState.ACTIVE and d.slices]
+        if len(active) <= min_active:
+            return None
+        for d in sorted(active, key=lambda d: (-d.draw, d.device_id)):
+            if self.drain_feasible(d.device_id):
+                return d.device_id
+        return None
 
     def place_failover(self, owner: str, slots: int,
                        service_model: str = "baas",

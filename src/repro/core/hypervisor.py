@@ -35,11 +35,15 @@ from repro.rc2f.admission import AdmissionController, AdmissionError
 class ClusterSpec:
     """Inventory description, e.g. 2 nodes × 2 devices × 256 chips.
     ``cache_pages_per_device`` meters each device's KV page pool (0 =
-    unmetered): page-bearing vSlice grants are then packed against it."""
+    unmetered): page-bearing vSlice grants are then packed against it.
+    ``device_draws`` assigns per-device power draws (cycled over the
+    fleet-wide device index) for heterogeneous energy accounting; empty
+    means a homogeneous fleet of draw 1.0."""
     n_nodes: int = 2
     devices_per_node: int = 2
     chips_per_device: int = 256
     cache_pages_per_device: int = 0
+    device_draws: Tuple[float, ...] = ()
 
 
 class Hypervisor:
@@ -53,9 +57,13 @@ class Hypervisor:
             node = self.db.add_node(f"node-{ni}")
             node.last_heartbeat = clock()
             for di in range(spec.devices_per_node):
+                idx = ni * spec.devices_per_node + di
+                draw = spec.device_draws[idx % len(spec.device_draws)] \
+                    if spec.device_draws else 1.0
                 self.db.add_device(f"dev-{ni}-{di}", node.node_id,
                                    spec.chips_per_device,
-                                   cache_pages=spec.cache_pages_per_device)
+                                   cache_pages=spec.cache_pages_per_device,
+                                   draw=draw)
         self.reconfig = Reconfigurator(ProgramCache())
         self.scheduler = BatchScheduler(self.db, clock)
         self.monitor = Monitor(self.db,

@@ -25,6 +25,10 @@ class MonitorConfig:
     straggler_factor: float = 1.5
     straggler_patience: int = 3
     step_window: int = 16
+    # fleet-wide traffic trend window (steps): arrival / completion counts
+    # pushed by the serving fleet each step feed the SLO-projection
+    # autoscaler (scale out on *projected* p95 breach, not just backlog)
+    traffic_window: int = 32
 
 
 class Monitor:
@@ -36,6 +40,8 @@ class Monitor:
         self._step_times: Dict[str, List[float]] = {}
         self._straggler_strikes: Dict[str, int] = {}
         self._pages: Dict[str, Tuple[int, int]] = {}   # dev -> (used, total)
+        # (arrivals, completions, active_devices) per fleet step
+        self._traffic: List[Tuple[int, int, int]] = []
         self.events: List[dict] = []
 
     # ---------------- heartbeats ----------------
@@ -101,6 +107,39 @@ class Monitor:
         self._step_times.pop(slice_id, None)
         self._straggler_strikes.pop(slice_id, None)
 
+    # ---------------- traffic trend (SLO projection input) ----------------
+    def record_traffic(self, arrivals: int, completions: int,
+                       active_devices: int):
+        """One fleet step's open-loop traffic sample: how many requests
+        ARRIVED (were submitted), how many COMPLETED, and how many devices
+        were serving. The windowed rates below are the arrival-rate /
+        service-rate trend the SLO autoscaler projects from."""
+        self._traffic.append((int(arrivals), int(completions),
+                              int(active_devices)))
+        if len(self._traffic) > self.cfg.traffic_window:
+            del self._traffic[0]
+
+    def arrival_rate(self) -> Optional[float]:
+        """Mean arrivals per step over the traffic window (None until the
+        first sample lands)."""
+        if not self._traffic:
+            return None
+        return sum(a for a, _, _ in self._traffic) / len(self._traffic)
+
+    def service_rate_per_device(self) -> Optional[float]:
+        """Mean request completions per device-step over the window — the
+        μ the projection multiplies by the active-device count. None until
+        at least one sample saw a serving device."""
+        dev_steps = sum(n for _, _, n in self._traffic)
+        if dev_steps <= 0:
+            return None
+        return sum(c for _, c, _ in self._traffic) / dev_steps
+
+    def traffic_stats(self) -> dict:
+        return {"window": len(self._traffic),
+                "arrival_rate": self.arrival_rate(),
+                "service_rate_per_device": self.service_rate_per_device()}
+
     # ---------------- KV page occupancy ----------------
     def record_pages(self, device_id: str, used: int, total: int):
         """Live KV page-pool occupancy for one device's dataplane (pushed
@@ -137,4 +176,5 @@ class Monitor:
                       for dev, (used, total) in self._pages.items()},
             "page_grants": self.db.page_grants(),
             "median_step_ms": self.median_step_ms(),
+            "traffic": self.traffic_stats(),
         }

@@ -1,6 +1,9 @@
 from repro.runtime.faults import FakeClock, FaultEvent, FaultInjector
 from repro.runtime.fleet import GatewayFleet, JournalEntry
 from repro.runtime.gateway import ServingGateway, TenantSession
+from repro.runtime.loadgen import (Arrival, FleetSpec, SoakMatrix,
+                                   TraceSpec, replay_trace, synthesize,
+                                   tenant_shares)
 from repro.runtime.losses import chunked_xent, full_xent
 from repro.runtime.paged import PagePoolManager
 from repro.runtime.serve import (BatchingEngine, Request, jit_serve_step,

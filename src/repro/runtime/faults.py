@@ -129,6 +129,29 @@ class FaultInjector:
         target = self.rng.choice(sorted(node_ids))
         return self.kill_node_at(step, target)
 
+    def plan_soak(self, device_ids: Sequence[str], node_ids: Sequence[str],
+                  lo: int, hi: int, kills: int = 1,
+                  partitions: int = 1,
+                  partition_len: int = 2) -> List[FaultEvent]:
+        """Seeded mixed-fault schedule for one soak-matrix cell: ``kills``
+        device kills plus ``partitions`` transient node partitions (each
+        healed ``partition_len`` steps later), all targets and steps drawn
+        from the seed inside [lo, hi). Targets are drawn from sorted id
+        lists so the schedule depends only on (seed, id sets) — never on
+        iteration order. Returns the scheduled events."""
+        planned: List[FaultEvent] = []
+        for _ in range(kills):
+            if device_ids:
+                planned.append(self.plan_device_kill(device_ids, lo, hi))
+        for _ in range(partitions):
+            if node_ids:
+                step = self.rng.randrange(lo, hi)
+                target = self.rng.choice(sorted(node_ids))
+                planned.append(self.partition_node_at(step, target))
+                planned.append(self.heal_node_at(step + partition_len,
+                                                 target))
+        return planned
+
     # ---------------- runtime hooks ----------------
     def tick(self, hv) -> List[FaultEvent]:
         """One step boundary: advance the clock, fire due events, then

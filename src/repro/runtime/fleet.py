@@ -88,6 +88,9 @@ class GatewayFleet:
                  paged: bool = False, page_size: int = 16,
                  cache_pages: Optional[int] = None,
                  page_pressure: float = 0.85,
+                 slo_p95_steps: Optional[float] = None,
+                 slo_horizon: int = 16,
+                 scale_in_margin: float = 0.5,
                  faults: Optional[FaultInjector] = None):
         # fail fast, before any session can allocate: lazy engine creation
         # must never be the first place this surfaces (it would strand an
@@ -111,6 +114,21 @@ class GatewayFleet:
         self.migrate_every = migrate_every       # steps between sweeps
         self.autoscale_every = autoscale_every   # steps between autoscale
         self.scale_up_queue_depth = scale_up_queue_depth
+        # SLO-driven elasticity (opt-in): when a p95 target (in fleet
+        # steps) is set, autoscale additionally wakes devices on a
+        # PROJECTED p95 breach from the monitor's arrival/service-rate
+        # trend, and consolidates (parks highest-draw devices first) when
+        # the projection sits under scale_in_margin * slo with no backlog.
+        self.slo_p95_steps = slo_p95_steps
+        self.slo_horizon = slo_horizon
+        self.scale_in_margin = scale_in_margin
+        self.autoscale_log: List[dict] = []
+        # open-loop traffic counters, drained into the monitor every step
+        self._arrivals_since_step = 0
+        self._completions_since_step = 0
+        # energy integral: sum over steps of the un-parked fleet's class
+        # draw (device-steps x draw; PARKED/DEAD devices are free)
+        self.energy = 0.0
         self.elastic = ElasticController(hv)
         # deterministic chaos: when an injector is attached, every step()
         # ticks it (clock + heartbeats + scheduled faults) and runs the
@@ -310,6 +328,7 @@ class GatewayFleet:
         req._session = sess
         sanitizer.emit("journal", (self._san, req.request_id), "append")
         self.journal[req.request_id] = JournalEntry(req, tenant)
+        self._arrivals_since_step += 1
         return req
 
     def cancel(self, req: Request) -> bool:
@@ -369,6 +388,14 @@ class GatewayFleet:
                 self.hv.monitor.record_pages(dev, eng.pool.used_pages,
                                              eng.pool.total_pages)
         self.steps += 1
+        # one traffic sample per step feeds the SLO-projection autoscaler;
+        # the energy integral charges every un-parked device its class draw
+        self.hv.monitor.record_traffic(self._arrivals_since_step,
+                                       self._completions_since_step,
+                                       len(self._engines))
+        self._arrivals_since_step = 0
+        self._completions_since_step = 0
+        self.energy += self.hv.db.active_draw()
         if self.migrate_every and self.steps % self.migrate_every == 0:
             self.rebalance()
         if self.autoscale_every and self.steps % self.autoscale_every == 0:
@@ -410,6 +437,8 @@ class GatewayFleet:
         if self.journal.pop(req.request_id, None) is not None:
             sanitizer.emit("journal",
                            (self._san, req.request_id), "retire")
+        if req.finish_reason != "cancelled":
+            self._completions_since_step += 1
         settle_finished_request(self.hv, self._sessions, req)
 
     # ------------------------------------------------------------------
@@ -639,30 +668,81 @@ class GatewayFleet:
                 for dev, e in self._engines.items()}
 
     def autoscale(self) -> Optional[str]:
-        """Scale out when the aggregate backlog outgrows the active fleet
-        OR a device's KV page pool runs hot: wake a PARKED device and move
-        the deepest-queued (or page-hungriest) tenant onto it — the
-        hand-off listener carries the traffic (and pages). Always parks
-        empty idle engines on the way out. Returns the woken device id,
-        if any."""
+        """Single-action autoscale arbitration: evaluate every scaling
+        signal, act on AT MOST ONE per invocation, in priority order —
+
+          1. queue depth  (aggregate backlog outgrew the active fleet),
+          2. SLO projection (projected p95 breach from the arrival-rate /
+             service-rate trend; only when ``slo_p95_steps`` is set),
+          3. page pressure (a device's KV pool runs hot; paged fleets),
+
+        each waking one PARKED device and moving the deepest-queued (or
+        page-hungriest) tenant onto it via a live hand-off. A burst wave
+        routinely trips queue depth AND page pressure on the same tick;
+        acting on both would wake two devices for one overload and
+        oscillate against the energy policy, so later signals are only
+        consulted when every earlier one declined to act. When NO
+        scale-out fired, the backlog is empty and the projection sits
+        under ``scale_in_margin`` of the SLO, the diurnal down-ramp half
+        runs instead: drain the highest-draw drainable device
+        (``pick_scale_in_device``) so the power-hungry classes park first.
+        Always parks empty idle engines on the way out. Returns the woken
+        device id, if any."""
         queued = self.queued_by_device()
+        backlog = sum(queued.values())
         n_active = max(1, len(self._engines))
-        woken = None
-        if sum(queued.values()) >= self.scale_up_queue_depth * n_active:
+        woken: Optional[str] = None
+        signal: Optional[str] = None
+        if backlog >= self.scale_up_queue_depth * n_active:
             tenant = self._deepest_queued_tenant()
             if tenant is not None:
                 new = self.elastic.scale_out(self._sessions[tenant].slice_id)
                 if new is not None:
-                    woken = new.device_id
+                    woken, signal = new.device_id, "queue_depth"
+        if woken is None and self.slo_p95_steps is not None:
+            tenant = self._deepest_queued_tenant()
+            if tenant is not None:
+                new = self.elastic.scale_out_on_slo(
+                    self._sessions[tenant].slice_id, self.slo_p95_steps,
+                    backlog, self.slo_horizon)
+                if new is not None:
+                    woken, signal = new.device_id, "slo_projection"
         if woken is None and self.paged:
             # memory pressure is a scale-out signal of its own: a device
             # can stall on pages with a near-empty queue (long contexts)
             new = self.elastic.scale_out_on_page_pressure(
                 self._page_hungriest_slices(), self.page_pressure)
             if new is not None:
-                woken = new.device_id
+                woken, signal = new.device_id, "page_pressure"
+        if woken is None and self.slo_p95_steps is not None and backlog == 0:
+            self._maybe_scale_in()
         self.park_idle_engines()
+        if woken is not None:
+            self.autoscale_log.append({"step": self.steps, "action":
+                                       "scale_out", "signal": signal,
+                                       "device": woken})
         return woken
+
+    def _maybe_scale_in(self) -> Optional[str]:
+        """Down-ramp consolidation: when the fleet is comfortably under
+        SLO (projection below ``scale_in_margin * slo_p95_steps``, or no
+        trend at all — a dead-quiet trough has no completions to measure a
+        service rate from), drain the highest-draw drainable device so it
+        parks. At most one drain per autoscale tick; ``consolidate``
+        dry-runs the re-packing first, so an infeasible drain is a no-op.
+        """
+        projected = self.elastic.projected_p95_steps(0, self.slo_horizon)
+        if (projected is not None
+                and projected > self.scale_in_margin * self.slo_p95_steps):
+            return None
+        dev = self.elastic.pick_scale_in_device(min_active=1)
+        if dev is None:
+            return None
+        if not self.elastic.consolidate(dev):
+            return None
+        self.autoscale_log.append({"step": self.steps, "action": "scale_in",
+                                   "device": dev})
+        return dev
 
     def _page_hungriest_slices(self) -> Dict[str, str]:
         """device_id -> slice_id of the tenant holding the most pool pages

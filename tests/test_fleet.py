@@ -320,3 +320,146 @@ def test_consolidate_drains_device_for_parking(served_model):
     fleet.park_idle_engines()
     assert list(fleet._engines) == [fleet.device_of("b")]
     fleet.close()
+
+
+# ---------------------------------------------------------------------------
+# Autoscale arbitration (one action per tick), SLO projection, down-ramp
+# ---------------------------------------------------------------------------
+
+def test_autoscale_one_action_when_multiple_signals_trip(served_model):
+    """Regression: a burst wave trips queue depth AND page pressure on
+    the same autoscale tick. Arbitration must act on exactly ONE signal —
+    waking two devices for one overload would oscillate against the
+    energy policy. With both signals hot and two PARKED devices
+    available, one call wakes exactly one device."""
+    cfg, model, params = served_model
+    hv = Hypervisor(ClusterSpec(n_nodes=1, devices_per_node=3))
+    fleet = GatewayFleet(hv, model, params, n_slots=2, max_len=64,
+                         paged=True, page_size=4,
+                         scale_up_queue_depth=2, page_pressure=0.8)
+    fleet.open_session("a", slots=1)
+    fleet.open_session("b", slots=1)
+    dev0 = fleet.device_of("a")
+    assert fleet.device_of("b") == dev0
+    for i in range(8):                       # deep backlog: queue depth trips
+        fleet.submit("a", _prompt(cfg, seed=i), max_new_tokens=4)
+    hv.monitor.record_pages(dev0, 95, 100)   # page pressure trips too
+
+    active_before = len([d for d in hv.db.devices.values()
+                         if d.state == DeviceState.ACTIVE])
+    woken = fleet.autoscale()
+    active_after = len([d for d in hv.db.devices.values()
+                        if d.state == DeviceState.ACTIVE])
+    assert woken is not None
+    assert active_after == active_before + 1, \
+        "both signals tripped but exactly one device may wake per tick"
+    assert len(fleet.autoscale_log) == 1
+    assert fleet.autoscale_log[0]["signal"] == "queue_depth"
+    fleet.run_until_idle()
+    fleet.close()
+
+
+def test_autoscale_slo_projection_wakes_before_queue_threshold(served_model):
+    """The SLO signal acts on the arrival/service-rate TREND: with a
+    backlog far below the queue-depth threshold but arrivals outrunning
+    measured service capacity, the projected p95 breaches the SLO and a
+    PARKED device wakes (signal = slo_projection)."""
+    cfg, model, params = served_model
+    hv = Hypervisor(ClusterSpec(n_nodes=1, devices_per_node=2))
+    fleet = GatewayFleet(hv, model, params, n_slots=2, max_len=64,
+                         scale_up_queue_depth=100,    # queue depth never trips
+                         slo_p95_steps=8.0, slo_horizon=16)
+    fleet.open_session("a", slots=1)
+    fleet.open_session("b", slots=1)
+    for i in range(4):                 # shallow backlog, but a real queue
+        fleet.submit("a", _prompt(cfg, seed=i), max_new_tokens=4)
+    # trend: 4 arrivals/step against 1 completion/device-step on 1 device
+    for _ in range(8):
+        hv.monitor.record_traffic(4, 1, 1)
+    projected = fleet.elastic.projected_p95_steps(2, 16)
+    assert projected is not None and projected > 8.0
+
+    woken = fleet.autoscale()
+    assert woken is not None
+    assert fleet.autoscale_log[-1]["signal"] == "slo_projection"
+    assert [e for e in hv.log if e["kind"] == "elastic_slo_scale_out"]
+    assert hv.db.devices[woken].state == DeviceState.ACTIVE
+    fleet.run_until_idle()
+    fleet.close()
+
+
+def test_autoscale_slo_quiet_trend_no_wake(served_model):
+    """Under-SLO projection must NOT wake anything: same queue, but the
+    measured service rate comfortably covers the arrivals."""
+    cfg, model, params = served_model
+    hv = Hypervisor(ClusterSpec(n_nodes=1, devices_per_node=2))
+    fleet = GatewayFleet(hv, model, params, n_slots=2, max_len=64,
+                         scale_up_queue_depth=100,
+                         slo_p95_steps=50.0, slo_horizon=4)
+    fleet.open_session("a", slots=1)
+    fleet.submit("a", _prompt(cfg), max_new_tokens=4)
+    for _ in range(8):
+        hv.monitor.record_traffic(1, 2, 1)   # mu covers lambda twice over
+    assert fleet.autoscale() is None
+    assert hv.db.devices["dev-0-1"].state == DeviceState.PARKED
+    fleet.run_until_idle()
+    fleet.close()
+
+
+def test_downramp_consolidates_in_draw_order(served_model):
+    """Diurnal down-ramp: with the backlog gone and the projection under
+    margin, autoscale drains ONE device per tick, highest class draw
+    first (3.0 parks before 2.0), re-packing tenants onto the cheap
+    device; post-trough requests still complete within the SLO."""
+    cfg, model, params = served_model
+    hv = Hypervisor(ClusterSpec(n_nodes=1, devices_per_node=3,
+                                device_draws=(1.0, 3.0, 2.0)))
+    fleet = GatewayFleet(hv, model, params, n_slots=4, max_len=64,
+                         slo_p95_steps=20.0)
+    for t in ("a", "b", "c", "d"):
+        fleet.open_session(t, slots=1)
+    assert len(fleet._engines) == 1          # pack-first: all on dev-0-0
+    # burst half: spread the fleet across all three devices
+    for t in ("a", "b"):
+        assert fleet.elastic.scale_out(fleet.session(t).slice_id)
+    assert len(set(fleet.device_of(t) for t in "abcd")) == 3
+    assert hv.db.devices["dev-0-1"].draw == 3.0
+
+    # trough: no queue, no trend -> one drain per tick, draw order
+    drained1 = fleet._maybe_scale_in()
+    assert drained1 == "dev-0-1", "the 3.0-draw device must park first"
+    assert hv.db.devices["dev-0-1"].state == DeviceState.PARKED
+    drained2 = fleet._maybe_scale_in()
+    assert drained2 == "dev-0-2", "the 2.0-draw device parks second"
+    assert fleet._maybe_scale_in() is None   # min_active floor holds
+    assert [e["device"] for e in fleet.autoscale_log
+            if e["action"] == "scale_in"] == ["dev-0-1", "dev-0-2"]
+    assert all(fleet.device_of(t) == "dev-0-0" for t in "abcd")
+
+    # through the trough the survivors still serve within the SLO
+    start = fleet.steps
+    reqs = [fleet.submit(t, _prompt(cfg, seed=ord(t)), max_new_tokens=4)
+            for t in "abcd"]
+    assert fleet.run_until_idle()
+    assert all(len(r.out_tokens) == 4 for r in reqs)
+    assert fleet.steps - start <= 20, "post-consolidation p95 within SLO"
+    fleet.close()
+
+
+def test_downramp_blocked_while_projection_above_margin(served_model):
+    """Scale-in must NOT fire while the projected p95 sits above the
+    scale-in margin — consolidating into a still-warm ramp would bounce
+    straight back out."""
+    cfg, model, params = served_model
+    hv = Hypervisor(ClusterSpec(n_nodes=1, devices_per_node=2))
+    fleet = GatewayFleet(hv, model, params, n_slots=4, max_len=64,
+                         slo_p95_steps=10.0, scale_in_margin=0.5)
+    fleet.open_session("a", slots=1)
+    fleet.open_session("b", slots=1)
+    assert fleet.elastic.scale_out(fleet.session("a").slice_id)
+    assert len(fleet._engines) == 2
+    for _ in range(8):                       # projection ~ lambda*h/mu = 8
+        hv.monitor.record_traffic(1, 1, 2)   # > margin (5) but under SLO
+    assert fleet._maybe_scale_in() is None
+    assert len(fleet._engines) == 2
+    fleet.close()
