@@ -1,0 +1,375 @@
+"""Async overlap benchmark: the lockstep round barrier vs the
+event-driven dataplane, on a fleet with one slow device class.
+
+The lockstep loop (``GatewayFleet.step``) is a fleet-wide barrier: every
+round waits for its slowest member, so a single speed-0.25 device makes
+EVERY engine pay ``tick_s / 0.25`` event-seconds per round. The event
+loop (``repro.runtime.events.EventLoop``) steps each engine every
+``tick_s / device.speed`` — the slow device simply fires less often
+while the rest of the fleet decodes at full cadence, with prefill
+chunked and journal syncs batched off the critical path.
+
+Fairness: both loops face the IDENTICAL open-loop workload in event
+time. Trace steps are event-seconds; the event loop schedules each
+arrival as a queue event at its step, the lockstep loop delivers the
+arrivals whose steps fall inside each round's ``tick_s / min(speed)``
+window. Completion times are read off the same clock (the queue's
+FakeClock / the round boundary), so goodput (tokens per event-second of
+makespan) and arrival->completion latency percentiles compare like for
+like. Everything derives from deterministic round counts — no host
+wall-clock — so ``BENCH_async.json`` is bit-stable across machines.
+
+``--check`` enforces the acceptance gates on the mixed-speed cell:
+event goodput >= 1.3x lockstep, a strictly lower event p95, the slow
+device actually carried traffic (else the barrier comparison is
+vacuous), and a direct cadence probe showing per-device step counts
+proportional to speed — the slow device no longer gates the fleet, it
+just steps less.
+
+Run:
+  PYTHONPATH=src python benchmarks/async_overlap.py --smoke --check
+  PYTHONPATH=src python benchmarks/async_overlap.py   # mixed + uniform
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+TICK_S = 1.0
+SPEEDS = (1.0, 1.0, 1.0, 0.25)        # one slow device class, coldest slot
+GOODPUT_GAIN_FLOOR = 1.3              # event must beat lockstep by >=30%
+CADENCE_TOLERANCE = 0.2               # |steps/ticks - speed| per device
+DRAIN_SLACK_S = 4096.0                # post-horizon drain bound (ev-s)
+
+
+def _setup():
+    import jax
+    from repro.configs import get_config, reduced
+    from repro.models import get_model
+    cfg = reduced(get_config("smollm-135m")).replace(dtype="float32")
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def overlap_trace(smoke: bool):
+    """Four single-slot tenants — one per device, so every device class
+    carries live traffic. Zipf skew puts the hottest tenant on the
+    fastest device and the coldest on the slow one (what any sane
+    placement would do); the lockstep barrier still charges everyone the
+    slow member's step time."""
+    from repro.runtime.loadgen import TraceSpec
+    return TraceSpec(name="overlap", horizon=16 if smoke else 32,
+                     base_rate=1.2, burst_rate_mult=1.0, tenants=4,
+                     zipf_s=1.1)
+
+
+def overlap_fleet(speeds):
+    from repro.runtime.loadgen import FleetSpec
+    name = "mixed4" if len(set(speeds)) > 1 else "uniform4"
+    return FleetSpec(name=name, n_nodes=4, devices_per_node=1,
+                     n_slots=4, slo_p95_steps=None,
+                     device_speeds=tuple(speeds))
+
+
+def _speed_of(fleet_spec, dev: str) -> float:
+    """Device id -> class speed (ClusterSpec cycles ``device_speeds``
+    over the global device index; one device per node makes the node
+    index THE device index)."""
+    speeds = fleet_spec.device_speeds
+    if not speeds:
+        return 1.0
+    node, k = int(dev.split("-")[1]), int(dev.split("-")[2])
+    return speeds[(node * fleet_spec.devices_per_node + k) % len(speeds)]
+
+
+def _percentiles(lat):
+    from repro.runtime.loadgen import percentile
+    return {"p50_s": percentile(lat, 50), "p95_s": percentile(lat, 95),
+            "p99_s": percentile(lat, 99)}
+
+
+def replay(loop: str, trace, fleet_spec, seed: int, model, params,
+           reconfig=None) -> dict:
+    """Drive one fleet through the trace under ``loop``, measuring in
+    event time. Returns makespan, goodput, latency percentiles and
+    per-device step counts."""
+    from repro.rc2f import AdmissionError
+    from repro.runtime.events import EventLoop
+    from repro.runtime.loadgen import build_fleet, seeded_rng, synthesize
+    from repro.runtime.loadgen import _mix
+    fleet, _ = build_fleet(fleet_spec, model, params, seed,
+                           reconfig=reconfig)
+    # full-device RSaaS sessions: placement packs by device slot
+    # capacity, so 4-slot sessions land one tenant per device — the
+    # coldest tenant on the slow device (open order follows Zipf rank)
+    for t in trace.tenant_ids():
+        fleet.open_session(t, slots=4, service_model="rsaas")
+    arrivals = synthesize(trace, seed)
+    vocab = model.cfg.vocab_size
+    prompt_rng = seeded_rng(_mix(seed, "prompts/" + trace.name))
+
+    outstanding = []                   # (req, arrival ev-time)
+    latencies = []
+    rejected = completed = tokens_out = 0
+
+    def submit(a):
+        nonlocal rejected
+        prompt = [prompt_rng.randrange(vocab) for _ in range(a.prompt_len)]
+        try:
+            req = fleet.submit(a.tenant, prompt, a.max_new_tokens)
+        except (AdmissionError, ValueError, KeyError):
+            rejected += 1
+            return
+        outstanding.append((req, a.step * TICK_S))
+
+    speeds = fleet_spec.device_speeds or (1.0,) * fleet_spec.n_devices()
+    barrier_s = TICK_S / min(speeds)   # lockstep: slowest member's step
+    evloop = None
+    if loop == "event":
+        evloop = EventLoop(fleet, tick_s=TICK_S)
+        for a in arrivals:
+            evloop.queue.at(a.step * TICK_S, lambda a=a: submit(a),
+                            kind="arrival")
+    pending = sorted(arrivals, key=lambda a: a.step)
+    steps_by_dev = {}
+    engine_ids = {}
+    now = 0.0
+    makespan = None
+    horizon_s = trace.horizon * TICK_S
+    while (now < horizon_s or outstanding) \
+            and now < horizon_s + DRAIN_SLACK_S:
+        if evloop is None:
+            # deliver every arrival inside this round's barrier window
+            while pending and pending[0].step * TICK_S < now + barrier_s:
+                submit(pending.pop(0))
+            fleet.step()
+            now += barrier_s
+        else:
+            evloop.run_ticks(1)
+            now = evloop.queue.clock()
+        for dev, eng in fleet._engines.items():
+            engine_ids[id(eng)] = (dev, eng)
+        still = []
+        for req, t0 in outstanding:
+            if not req.done.is_set():
+                still.append((req, t0))
+            elif req.finish_reason != "cancelled":
+                completed += 1
+                tokens_out += len(req.out_tokens)
+                latencies.append(now - t0)
+        outstanding = still
+        if not outstanding and not pending and makespan is None \
+                and now >= horizon_s:
+            makespan = now
+    if evloop is not None:
+        fleet.flush_journal()
+    fleet.verify_invariants()
+    for dev, eng in engine_ids.values():
+        steps_by_dev[dev] = steps_by_dev.get(dev, 0) + eng.steps
+    span = makespan if makespan is not None else now
+    rec = {
+        "loop": loop,
+        "arrivals": len(arrivals),
+        "rejected": rejected,
+        "completed": completed,
+        "incomplete": len(outstanding),
+        "tokens_out": tokens_out,
+        "makespan_s": round(span, 6),
+        "goodput_tokens_per_s": round(tokens_out / max(1e-9, span), 6),
+        "per_device_steps": {d: steps_by_dev[d]
+                             for d in sorted(steps_by_dev)},
+        "slow_device_active": any(
+            _speed_of(fleet_spec, d) < 1.0 and n > 0
+            for d, n in steps_by_dev.items()),
+    }
+    rec.update(_percentiles(latencies))
+    fleet.close()
+    return rec
+
+
+def run_cell(trace, fleet_spec, seed, model, params, reconfig=None) -> dict:
+    lk = replay("lockstep", trace, fleet_spec, seed, model, params,
+                reconfig=reconfig)
+    ev = replay("event", trace, fleet_spec, seed, model, params,
+                reconfig=reconfig)
+    gain = (ev["goodput_tokens_per_s"]
+            / max(1e-9, lk["goodput_tokens_per_s"]))
+    return {
+        "cell": {"trace": trace.name, "fleet": fleet_spec.name,
+                 "seed": int(seed)},
+        "device_speeds": list(fleet_spec.device_speeds
+                              or (1.0,) * fleet_spec.n_devices()),
+        "lockstep": lk,
+        "event": ev,
+        "goodput_gain": round(gain, 6),
+    }
+
+
+def cadence_probe(model, params, ticks: int = 24) -> dict:
+    """Direct evidence that the slow device no longer gates: four
+    always-busy single-tenant engines (one per device, mixed speeds),
+    driven ``ticks`` control windows by the event loop. Each engine's
+    step count must be ~``speed x ticks`` — and the workload must still
+    drain afterwards."""
+    from repro.core import ClusterSpec, Hypervisor, MonitorConfig
+    from repro.runtime.events import EventLoop
+    from repro.runtime.fleet import GatewayFleet
+    hv = Hypervisor(ClusterSpec(n_nodes=4, devices_per_node=1,
+                                device_speeds=SPEEDS),
+                    MonitorConfig(heartbeat_interval_s=1.0,
+                                  heartbeat_deadline_s=2.5))
+    fleet = GatewayFleet(hv, model, params, n_slots=4, max_len=64,
+                         paged=True)
+    reqs = []
+    for ti in range(4):
+        fleet.open_session(f"t{ti}", slots=4,
+                           service_model="rsaas")
+        reqs.append(fleet.submit(f"t{ti}", [7, 11, 13, 17],
+                                 max_new_tokens=40))
+    assert len(fleet._engines) == 4    # one busy engine per device class
+    ev = EventLoop(fleet, tick_s=TICK_S)
+    ev.run_ticks(ticks)
+    steps = {dev: eng.steps for dev, eng in sorted(fleet._engines.items())}
+    speeds = {dev: SPEEDS[int(dev.split("-")[1]) % len(SPEEDS)]
+              for dev in steps}
+    drained = ev.run_until_idle(max_ticks=2000) \
+        and all(r.done.is_set() for r in reqs)
+    fleet.close()
+    return {"ticks": ticks, "per_device_steps": steps, "speeds": speeds,
+            "drained": bool(drained)}
+
+
+def run_cells(smoke: bool, seed: int = 0, progress=None):
+    from repro.core.reconfig import ProgramCache, Reconfigurator
+    _, model, params = _setup()
+    reconfig = Reconfigurator(ProgramCache())
+    trace = overlap_trace(smoke)
+    probe = cadence_probe(model, params)
+    fleets = [overlap_fleet(SPEEDS)]
+    if not smoke:
+        fleets.append(overlap_fleet((1.0,) * 4))
+    records = []
+    for fspec in fleets:
+        rec = run_cell(trace, fspec, seed, model, params,
+                       reconfig=reconfig)
+        rec["cadence_probe"] = probe
+        records.append(rec)
+        if progress is not None:
+            progress(rec)
+    return records
+
+
+def check_gates(records) -> list:
+    """The acceptance gates (mixed-speed cells; the uniform cell is
+    report-only). Returns failure strings — empty means pass."""
+    failures = []
+    for rec in records:
+        key = f"{rec['cell']['trace']}|{rec['cell']['fleet']}"
+        lk, ev = rec["lockstep"], rec["event"]
+        for side in (lk, ev):
+            if side["completed"] != side["arrivals"] - side["rejected"] \
+                    or side["incomplete"]:
+                failures.append(
+                    f"{key}: {side['loop']} completed {side['completed']}"
+                    f"/{side['arrivals']} ({side['incomplete']} "
+                    "incomplete)")
+        probe = rec.get("cadence_probe")
+        if probe is not None:
+            if not probe["drained"]:
+                failures.append(f"{key}: cadence probe did not drain")
+            for dev, n in probe["per_device_steps"].items():
+                speed = probe["speeds"][dev]
+                got = n / max(1, probe["ticks"])
+                if abs(got - speed) > CADENCE_TOLERANCE:
+                    failures.append(
+                        f"{key}: probe {dev} stepped {got:.2f}/tick, "
+                        f"expected ~{speed:.2f} (speed-proportional "
+                        "cadence)")
+        if len(set(rec["device_speeds"])) == 1:
+            continue
+        for side in (lk, ev):
+            if not side["slow_device_active"]:
+                failures.append(
+                    f"{key}: slow device hosted no engine under "
+                    f"{side['loop']} — the barrier comparison is vacuous")
+        if rec["goodput_gain"] < GOODPUT_GAIN_FLOOR:
+            failures.append(
+                f"{key}: goodput gain {rec['goodput_gain']:.3f} < "
+                f"{GOODPUT_GAIN_FLOOR}")
+        if not (ev["p95_s"] is not None and lk["p95_s"] is not None
+                and ev["p95_s"] < lk["p95_s"]):
+            failures.append(
+                f"{key}: event p95 {ev['p95_s']} not below lockstep "
+                f"p95 {lk['p95_s']}")
+    return failures
+
+
+def run():
+    """benchmarks/run.py protocol: the smoke cell, as (name, value,
+    derived) rows."""
+    records = run_cells(smoke=True)
+    rec = records[0]
+    lk, ev = rec["lockstep"], rec["event"]
+    return [
+        ("async_overlap.mixed4.goodput_gain", rec["goodput_gain"],
+         f"event={ev['goodput_tokens_per_s']};"
+         f"lockstep={lk['goodput_tokens_per_s']}"),
+        ("async_overlap.mixed4.event_p95_s", float(ev["p95_s"]),
+         f"lockstep_p95_s={lk['p95_s']}"),
+        ("async_overlap.mixed4.event_makespan_s", ev["makespan_s"],
+         f"lockstep_makespan_s={lk['makespan_s']}"),
+    ]
+
+
+def main() -> int:
+    sys.path.insert(0, _ROOT)
+    sys.path.insert(0, os.path.join(_ROOT, "src"))
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="short trace, mixed-speed cell only (CI)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="BENCH_async.json")
+    ap.add_argument("--check", action="store_true",
+                    help="fail unless event goodput >= 1.3x lockstep, "
+                         "event p95 is lower, and cadence is "
+                         "speed-proportional")
+    args = ap.parse_args()
+
+    t0 = time.perf_counter()
+
+    def progress(rec):
+        lk, ev = rec["lockstep"], rec["event"]
+        print(f"  {rec['cell']['fleet']:10s} gain="
+              f"{rec['goodput_gain']:.2f}x "
+              f"p95 {lk['p95_s']} -> {ev['p95_s']} ev-s "
+              f"makespan {lk['makespan_s']} -> {ev['makespan_s']} "
+              f"steps={ev['per_device_steps']}", flush=True)
+
+    records = run_cells(smoke=args.smoke, seed=args.seed,
+                        progress=progress)
+    with open(args.out, "w") as f:
+        json.dump({"records": records}, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"{len(records)} cell(s) -> {args.out} "
+          f"({time.perf_counter() - t0:.1f}s host wall)")
+    if args.check:
+        failures = check_gates(records)
+        if failures:
+            print("ASYNC OVERLAP GATE FAILED:", file=sys.stderr)
+            for line in failures:
+                print("  " + line, file=sys.stderr)
+            return 1
+        print("overlap gates: OK (goodput >= "
+              f"{GOODPUT_GAIN_FLOOR}x, lower p95, speed-proportional "
+              "cadence)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

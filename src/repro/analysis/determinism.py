@@ -16,6 +16,11 @@ silently break it:
     Python set iteration order is salted per process; iterating one in
     ``runtime/``/``core/`` makes event order differ between runs. Wrap
     in ``sorted(...)`` to fix the order.
+  * **round-counter** — reading the fleet-wide round counter
+    (``.steps``) inside the event loop (``runtime/events.py``): event
+    code paced by the lockstep round counter silently re-introduces the
+    barrier the event queue exists to remove. The loop keeps its own
+    ``ticks`` count; engine-local pacing belongs in the engine.
 """
 from __future__ import annotations
 
@@ -160,12 +165,40 @@ def _check_set_iter(mod: ModuleInfo, out: List[Finding]):
             "the ordered source collection"))
 
 
+EVENT_LOOP_SUFFIXES = ("runtime/events.py",)
+ROUND_COUNTER_ATTR = "steps"
+
+
+def _check_round_counter(mod: ModuleInfo, out: List[Finding]):
+    """Flag READS of ``.steps`` in event-loop modules. Stores/AugAssigns
+    are fine (an engine counts its own steps); it is basing event-loop
+    control flow on the fleet round counter that re-couples the loops."""
+    if not any(mod.rel.endswith(s) for s in EVENT_LOOP_SUFFIXES):
+        return
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Attribute) \
+                or node.attr != ROUND_COUNTER_ATTR \
+                or not isinstance(node.ctx, ast.Load):
+            continue
+        fi = mod.enclosing_function(node)
+        func = fi.node if fi else None
+        if mod.allows(node.lineno, "round-counter", func):
+            continue
+        out.append(Finding(
+            PASS, "round-counter", mod.rel, node.lineno,
+            fi.qualname if fi else "",
+            "event-loop code reading the fleet round counter (.steps) — "
+            "pacing events off the lockstep round counter re-introduces "
+            "the barrier; use the loop's own ticks / the event clock"))
+
+
 def run(ws: Workspace) -> List[Finding]:
     out: List[Finding] = []
     scoped = ws.select(*SCOPED_DIRS)
     for mod in scoped:
         _check_time(mod, out)
         _check_set_iter(mod, out)
+        _check_round_counter(mod, out)
     for mod in ws.modules:          # unseeded randomness: repo-wide
         _check_random(mod, out)
     return out

@@ -47,20 +47,29 @@ class Machine:
 
 
 MACHINES: Dict[str, Machine] = {
-    # A request as the engine+fleet see it. TRANSIT = drained for a live
-    # hand-off; ORPHANED = its device died while it was queued/decoding.
-    # ``requeue`` (engine.resume) is legal from QUEUED too: preemption
-    # emits preempt first, so resume's requeue self-loops — but a resume
-    # of a RUNNING or DONE request is the bug class this machine exists
-    # to catch (double-queue / decode-after-settle).
+    # A request as the engine+fleet see it. PREFILLING = admitted to a
+    # slot but its prompt prefill is not yet spliced (the event loop
+    # chunks it — ``chunk`` self-loops once per chunk event; the lockstep
+    # loop passes through it in one admit→ready breath). TRANSIT =
+    # drained for a live hand-off; ORPHANED = its device died while it
+    # was queued/decoding. ``requeue`` (engine.resume) is legal from
+    # QUEUED too: preemption emits preempt first, so resume's requeue
+    # self-loops — but a resume of a RUNNING or DONE request is the bug
+    # class this machine exists to catch (double-queue /
+    # decode-after-settle).
     "request": Machine(
         initial="NEW",
         transitions={
             ("NEW", "submit"): "QUEUED",
-            ("QUEUED", "admit"): "RUNNING",
+            ("QUEUED", "admit"): "PREFILLING",
             ("QUEUED", "requeue"): "QUEUED",
             ("QUEUED", "orphan"): "ORPHANED",
             ("QUEUED", "cancel"): "DONE",
+            ("PREFILLING", "chunk"): "PREFILLING",
+            ("PREFILLING", "ready"): "RUNNING",
+            ("PREFILLING", "drain"): "TRANSIT",
+            ("PREFILLING", "orphan"): "ORPHANED",
+            ("PREFILLING", "cancel"): "DONE",
             ("RUNNING", "preempt"): "QUEUED",
             ("RUNNING", "drain"): "TRANSIT",
             ("RUNNING", "orphan"): "ORPHANED",
@@ -111,14 +120,25 @@ MACHINES: Dict[str, Machine] = {
         terminal=frozenset({"DEAD"}),
         pop_terminal=False),
     # A fleet journal entry: append exactly once, replay while open only,
-    # retire exactly once. RETIRED pops the key, so a replay after retire
-    # resolves against NEW — still illegal, which is exactly the
-    # "settled request replayed by recovery" bug.
+    # retire exactly once. The event loop batches token syncs off the
+    # critical path: ``dirty`` marks the entry stale vs the live request,
+    # ``flush`` copies the token log back (DIRTY→OPEN), and ``rollback``
+    # abandons unflushed tokens when their device died (crash recovery
+    # replays from the last flush). Retire is ONLY legal from OPEN — that
+    # is the machine-enforced flush barrier: quota can never settle, and
+    # a hand-off can never export, against a dirty entry. RETIRED pops
+    # the key, so a replay after retire resolves against NEW — still
+    # illegal, which is exactly the "settled request replayed by
+    # recovery" bug.
     "journal": Machine(
         initial="NEW",
         transitions={
             ("NEW", "append"): "OPEN",
             ("OPEN", "replay"): "OPEN",
+            ("OPEN", "dirty"): "DIRTY",
+            ("DIRTY", "dirty"): "DIRTY",
+            ("DIRTY", "flush"): "OPEN",
+            ("DIRTY", "rollback"): "OPEN",
             ("OPEN", "retire"): "RETIRED",
         },
         terminal=frozenset({"RETIRED"})),

@@ -96,7 +96,7 @@ SAFE_CALLS = {
 }
 
 JOURNAL_MARK = "_mark_cancelled"
-JOURNAL_RETIRE_CALLS = {"_on_finish", "cancel_queued"}
+JOURNAL_RETIRE_CALLS = {"_on_finish", "cancel_queued", "_retire_entry"}
 
 
 def _is_fallible(stmt: ast.stmt) -> Optional[ast.AST]:

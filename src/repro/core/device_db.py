@@ -69,6 +69,13 @@ class PhysicalDevice:
     # metric (device-steps x draw) and the scale-in policy ("park the
     # power-hungry devices first") both read it.
     draw: float = 1.0
+    # relative dataplane speed: the event-driven loop steps this device's
+    # engine every ``tick_s / speed`` event-seconds, so a slow device
+    # class (speed < 1) decodes on its own cadence instead of gating the
+    # whole fleet behind a lockstep barrier. The lockstep loop ignores it
+    # (every engine steps once per round, the round costs the slowest
+    # member's period).
+    speed: float = 1.0
 
     def used_slots(self) -> int:
         return sum(s.slots for s in self.slices.values()
@@ -110,14 +117,16 @@ class DeviceDB:
             return n
 
     def add_device(self, device_id: str, node_id: str, chips: int = 256,
-                   cache_pages: int = 0, draw: float = 1.0):
+                   cache_pages: int = 0, draw: float = 1.0,
+                   speed: float = 1.0):
         with self._lock:
             if device_id in self.devices:
                 raise ValueError(f"device {device_id} exists")
             if node_id not in self.nodes:
                 raise KeyError(f"no node {node_id}")
             d = PhysicalDevice(device_id, node_id, chips,
-                               cache_pages=cache_pages, draw=draw)
+                               cache_pages=cache_pages, draw=draw,
+                               speed=speed)
             self.devices[device_id] = d
             self.nodes[node_id].devices.append(device_id)
             return d

@@ -38,12 +38,16 @@ class ClusterSpec:
     unmetered): page-bearing vSlice grants are then packed against it.
     ``device_draws`` assigns per-device power draws (cycled over the
     fleet-wide device index) for heterogeneous energy accounting; empty
-    means a homogeneous fleet of draw 1.0."""
+    means a homogeneous fleet of draw 1.0. ``device_speeds`` does the
+    same for relative dataplane speed: the event-driven serving loop
+    steps each engine every ``tick_s / speed`` event-seconds, so mixed
+    device classes decode on their own cadence."""
     n_nodes: int = 2
     devices_per_node: int = 2
     chips_per_device: int = 256
     cache_pages_per_device: int = 0
     device_draws: Tuple[float, ...] = ()
+    device_speeds: Tuple[float, ...] = ()
 
 
 class Hypervisor:
@@ -60,10 +64,12 @@ class Hypervisor:
                 idx = ni * spec.devices_per_node + di
                 draw = spec.device_draws[idx % len(spec.device_draws)] \
                     if spec.device_draws else 1.0
+                speed = spec.device_speeds[idx % len(spec.device_speeds)] \
+                    if spec.device_speeds else 1.0
                 self.db.add_device(f"dev-{ni}-{di}", node.node_id,
                                    spec.chips_per_device,
                                    cache_pages=spec.cache_pages_per_device,
-                                   draw=draw)
+                                   draw=draw, speed=speed)
         self.reconfig = Reconfigurator(ProgramCache())
         self.scheduler = BatchScheduler(self.db, clock)
         self.monitor = Monitor(self.db,
@@ -250,6 +256,7 @@ class Hypervisor:
         for sid in ids:
             self.monitor.clear_slice(sid)
         self.monitor.clear_pages(device_id)
+        self.monitor.clear_traffic(device_id)
         self.monitor.events.append({"t": self.clock(), "kind": "device_dead",
                                     "device": device_id, "orphans": ids})
         if ids:

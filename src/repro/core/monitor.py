@@ -25,9 +25,13 @@ class MonitorConfig:
     straggler_factor: float = 1.5
     straggler_patience: int = 3
     step_window: int = 16
-    # fleet-wide traffic trend window (steps): arrival / completion counts
-    # pushed by the serving fleet each step feed the SLO-projection
-    # autoscaler (scale out on *projected* p95 breach, not just backlog)
+    # fleet-wide traffic trend window: arrival / completion counts pushed
+    # by the serving fleet each round feed the SLO-projection autoscaler
+    # (scale out on *projected* p95 breach, not just backlog). The window
+    # bounds BOTH the sample count and the event-time span in seconds —
+    # under the event-driven loop samples arrive on the queue's clock, so
+    # a burst of closely spaced rounds must not stretch the trend's
+    # horizon, and a long quiet gap must age old samples out
     traffic_window: int = 32
 
 
@@ -40,8 +44,12 @@ class Monitor:
         self._step_times: Dict[str, List[float]] = {}
         self._straggler_strikes: Dict[str, int] = {}
         self._pages: Dict[str, Tuple[int, int]] = {}   # dev -> (used, total)
-        # (arrivals, completions, active_devices) per fleet step
-        self._traffic: List[Tuple[int, int, int]] = []
+        # (t, arrivals, completions, active_devices) per fleet round, t on
+        # the injected clock (event time under the event-driven loop)
+        self._traffic: List[Tuple[float, int, int, int]] = []
+        # per-device completion samples (t, n) — cleared when the device
+        # dies or parks, pruned to the same window otherwise
+        self._dev_traffic: Dict[str, List[Tuple[float, int]]] = {}
         self.events: List[dict] = []
 
     # ---------------- heartbeats ----------------
@@ -65,6 +73,7 @@ class Monitor:
                     self.clear_slice(s.slice_id)
                 for did in node.devices:
                     self.clear_pages(did)
+                    self.clear_traffic(did)
                 orphans.extend(dead)
                 self.events.append({"t": now, "kind": "node_dead",
                                     "node": node.node_id,
@@ -109,34 +118,86 @@ class Monitor:
 
     # ---------------- traffic trend (SLO projection input) ----------------
     def record_traffic(self, arrivals: int, completions: int,
-                       active_devices: int):
-        """One fleet step's open-loop traffic sample: how many requests
+                       active_devices: int,
+                       by_device: Optional[Dict[str, int]] = None):
+        """One fleet round's open-loop traffic sample: how many requests
         ARRIVED (were submitted), how many COMPLETED, and how many devices
-        were serving. The windowed rates below are the arrival-rate /
-        service-rate trend the SLO autoscaler projects from."""
-        self._traffic.append((int(arrivals), int(completions),
+        were serving. Samples are stamped with the injected clock (EVENT
+        time under the event-driven loop — rounds are no longer equally
+        spaced, so rates must divide by elapsed time, not sample count).
+        ``by_device`` attributes completions to the device that served
+        them; a dead device's samples are dropped by ``clear_traffic`` in
+        the failure sweeps, so churn can never grow these windows."""
+        t = float(self.clock())
+        self._traffic.append((t, int(arrivals), int(completions),
                               int(active_devices)))
-        if len(self._traffic) > self.cfg.traffic_window:
-            del self._traffic[0]
+        self._prune_traffic(self._traffic, t)
+        for dev, n in (by_device or {}).items():
+            w = self._dev_traffic.setdefault(dev, [])
+            w.append((t, int(n)))
+            self._prune_traffic(w, t)
+
+    def _prune_traffic(self, window: list, now: float) -> None:
+        """Window discipline: cap the sample count AND age out samples
+        older than ``traffic_window`` seconds of (event) time."""
+        cap = self.cfg.traffic_window
+        if len(window) > cap:
+            del window[:len(window) - cap]
+        cut = now - cap
+        drop = 0
+        while drop < len(window) - 1 and window[drop][0] < cut:
+            drop += 1
+        if drop:
+            del window[:drop]
+
+    def _traffic_span(self) -> float:
+        """Elapsed time the window covers. Rounds recorded within one
+        clock reading (lockstep tests with a wall clock) degenerate to
+        per-sample rates: span == sample count, preserving the old
+        rate-per-round semantics."""
+        dt = self._traffic[-1][0] - self._traffic[0][0]
+        return dt if dt > 0 else float(len(self._traffic))
 
     def arrival_rate(self) -> Optional[float]:
-        """Mean arrivals per step over the traffic window (None until the
-        first sample lands)."""
+        """Arrivals per unit event-time over the traffic window (None
+        until the first sample lands)."""
         if not self._traffic:
             return None
-        return sum(a for a, _, _ in self._traffic) / len(self._traffic)
+        return sum(a for _, a, _, _ in self._traffic) / self._traffic_span()
 
     def service_rate_per_device(self) -> Optional[float]:
-        """Mean request completions per device-step over the window — the
-        μ the projection multiplies by the active-device count. None until
-        at least one sample saw a serving device."""
-        dev_steps = sum(n for _, _, n in self._traffic)
-        if dev_steps <= 0:
+        """Completions per device per unit event-time over the window —
+        the μ the projection multiplies by the active-device count. The
+        denominator is device-time: mean serving devices × window span.
+        None until at least one sample saw a serving device."""
+        if not self._traffic:
             return None
-        return sum(c for _, c, _ in self._traffic) / dev_steps
+        mean_active = sum(n for _, _, _, n in self._traffic) \
+            / len(self._traffic)
+        dev_time = mean_active * self._traffic_span()
+        if dev_time <= 0:
+            return None
+        return sum(c for _, _, c, _ in self._traffic) / dev_time
+
+    def clear_traffic(self, device_id: str):
+        """Drop a device's completion samples — called from the dead-device
+        sweeps alongside step telemetry and page occupancy, so a device
+        dying mid-window cannot leave its deque growing (or its stale
+        completions flattering the fleet's service rate) forever."""
+        self._dev_traffic.pop(device_id, None)
+
+    def device_completion_rate(self, device_id: str) -> Optional[float]:
+        """One device's completions per unit event-time (None: no samples)."""
+        w = self._dev_traffic.get(device_id)
+        if not w:
+            return None
+        dt = w[-1][0] - w[0][0]
+        span = dt if dt > 0 else float(len(w))
+        return sum(n for _, n in w) / span
 
     def traffic_stats(self) -> dict:
         return {"window": len(self._traffic),
+                "span": self._traffic_span() if self._traffic else 0.0,
                 "arrival_rate": self.arrival_rate(),
                 "service_rate_per_device": self.service_rate_per_device()}
 

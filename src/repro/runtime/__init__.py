@@ -1,3 +1,4 @@
+from repro.runtime.events import Event, EventLoop, EventQueue
 from repro.runtime.faults import FakeClock, FaultEvent, FaultInjector
 from repro.runtime.fleet import GatewayFleet, JournalEntry
 from repro.runtime.gateway import ServingGateway, TenantSession

@@ -153,13 +153,21 @@ class FaultInjector:
         return planned
 
     # ---------------- runtime hooks ----------------
-    def tick(self, hv) -> List[FaultEvent]:
+    def tick(self, hv, advance_clock: bool = True) -> List[FaultEvent]:
         """One step boundary: advance the clock, fire due events, then
         heartbeat every alive, non-silenced node. Returns the events that
-        fired this tick."""
+        fired this tick.
+
+        ``advance_clock=False`` is the event-driven mode: the
+        ``EventQueue`` owns the shared clock and has already set event
+        time when the tick event fires, so advancing here would
+        double-count. The fault SCHEDULE stays step-indexed either way —
+        chaos timing is a pure function of the seed, not of who owns the
+        clock."""
         step = self.steps
         self.steps += 1
-        self.clock.advance(self.tick_s)
+        if advance_clock:
+            self.clock.advance(self.tick_s)
         fired = []
         for ev in self.events:
             if not ev.fired and ev.step <= step:

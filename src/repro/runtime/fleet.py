@@ -126,6 +126,7 @@ class GatewayFleet:
         # open-loop traffic counters, drained into the monitor every step
         self._arrivals_since_step = 0
         self._completions_since_step = 0
+        self._dev_completions: Dict[str, int] = {}   # per-device, same window
         # energy integral: sum over steps of the un-parked fleet's class
         # draw (device-steps x draw; PARKED/DEAD devices are free)
         self.energy = 0.0
@@ -140,6 +141,25 @@ class GatewayFleet:
         # dead device's engine (queues, slots, KV pages) is gone, but the
         # journal re-creates its traffic by prefix replay elsewhere.
         self.journal: Dict[int, JournalEntry] = {}
+        # Event-driven journal mode (set by runtime.events.EventLoop):
+        # instead of copying every inflight request's token log after
+        # every engine step, step_engine only MARKS entries dirty and the
+        # event loop batches the copies off the critical path
+        # (flush_journal on its own cadence). The hard flush barrier:
+        # _retire_entry (quota settle) and the hand-off export path flush
+        # per-request first — machine-enforced, since the journal machine
+        # rejects retire from DIRTY.
+        self.journal_lazy = False
+        self._dirty: Dict[int, bool] = {}        # insertion-ordered rids
+        # Overlapped hand-off (event mode): the EventLoop installs a hook
+        # that exports pages WITHOUT draining and schedules the completion
+        # a few ticks later, letting the source keep decoding during the
+        # copy. Sources mid-copy (and scale-in drain targets) sit in
+        # _draining so autoscale's backlog sample skips them.
+        self._handoff_hook = None
+        self._event_driven = False               # EventQueue owns the clock
+        self._draining: set = set()
+        self._inflight_handoffs: Dict[str, int] = {}
         self._san = sanitizer.scope()    # journal-machine key namespace
         self.recoveries: List[dict] = []
         # one id stream for the whole fleet: request ids must stay unique
@@ -221,6 +241,7 @@ class GatewayFleet:
             if eng.idle() and not self.hv.db.device(dev).slices:
                 del self._engines[dev]
                 self.hv.monitor.clear_pages(dev)
+                self.hv.monitor.clear_traffic(dev)
                 parked.append(dev)
                 self.hv._log("engine_park", device=dev)
         return parked
@@ -275,9 +296,7 @@ class GatewayFleet:
         engine = self._engines.get(dev)
         if engine is not None:
             for r in engine.cancel_queued(tenant):
-                if self.journal.pop(r.request_id, None) is not None:
-                    sanitizer.emit("journal",
-                                   (self._san, r.request_id), "retire")
+                self._retire_entry(r.request_id)
             engine.set_tenant_share(tenant, None)
             engine.set_tenant_pages(tenant, None)
         self._settle_outstanding(sess)
@@ -331,6 +350,59 @@ class GatewayFleet:
         self._arrivals_since_step += 1
         return req
 
+    # ------------------------------------------------------------------
+    # Recovery journal (lazy sync + the flush barrier)
+    # ------------------------------------------------------------------
+    def _retire_entry(self, request_id: int, crashed: bool = False) -> bool:
+        """Pop a journal entry THROUGH the flush barrier: a DIRTY entry is
+        flushed first (live paths — the copy itself is moot since the
+        entry is discarded, but the transition is what the journal machine
+        checks) or rolled back (crash paths abandon unflushed tokens).
+        Retiring from DIRTY directly is illegal under RC3E_SANITIZE=1."""
+        entry = self.journal.pop(request_id, None)
+        if entry is None:
+            return False
+        if self._dirty.pop(request_id, None):
+            sanitizer.emit("journal", (self._san, request_id),
+                           "rollback" if crashed else "flush")
+        sanitizer.emit("journal", (self._san, request_id), "retire")
+        return True
+
+    def flush_journal(self, request_id: Optional[int] = None) -> int:
+        """Copy generated-token logs into their journal entries
+        (DIRTY -> OPEN). The event loop calls the batched form on its own
+        cadence — journal durability off the per-token critical path; the
+        per-request form is the flush barrier in front of quota settles
+        and hand-off exports. Returns the number of entries flushed."""
+        rids = [request_id] if request_id is not None else list(self._dirty)
+        flushed = 0
+        for rid in rids:
+            if self._dirty.pop(rid, None) is None:
+                continue
+            entry = self.journal.get(rid)
+            if entry is None:
+                continue
+            entry.tokens = list(entry.req.out_tokens)
+            sanitizer.emit("journal", (self._san, rid), "flush")
+            flushed += 1
+        return flushed
+
+    def _sync_journal(self, eng: BatchingEngine) -> None:
+        """Post-step journal sync for one engine: eager mode copies every
+        inflight token log now (lockstep PR 5 behavior); lazy mode only
+        marks entries dirty for a later batched flush."""
+        for r in eng.inflight():
+            entry = self.journal.get(r.request_id)
+            if entry is None:
+                continue
+            if self.journal_lazy:
+                if r.request_id not in self._dirty:
+                    self._dirty[r.request_id] = True
+                    sanitizer.emit("journal",
+                                   (self._san, r.request_id), "dirty")
+            else:
+                entry.tokens = list(r.out_tokens)
+
     def cancel(self, req: Request) -> bool:
         """Cancel one request on whichever engine holds it (queued or in
         flight; an in-flight cancel frees the slot and its pool pages).
@@ -355,51 +427,72 @@ class GatewayFleet:
             return True
         return False
 
-    def step(self) -> int:
-        """One decode step on EVERY active engine (devices run concurrently
-        in hardware; ``last_round_ms`` records each device's wall time so
-        callers can account device-parallel time). With a fault injector
-        attached, each step boundary first ticks the injector (clock,
-        heartbeats, scheduled kills), runs the heartbeat sweep, and
-        recovers any engine stranded on a dead device. Periodically sweeps
-        for stragglers and autoscales."""
+    def begin_round(self) -> None:
+        """Control-plane half of a round boundary: tick the fault injector
+        (scheduled kills + heartbeats; the clock too, unless the event
+        queue owns it), run the heartbeat/failover sweep, and recover any
+        engine stranded on a dead device."""
         if self.faults is not None:
-            self.faults.tick(self.hv)
+            self.faults.tick(self.hv,
+                             advance_clock=not self._event_driven)
             self.hv.handle_failures()
         self._recover_dead_engines()
-        total = 0
-        self.last_round_ms = {}
-        for dev in list(self._engines):
-            eng = self._engines.get(dev)
-            if eng is None:      # parked by a hand-off mid-round
-                continue
-            if not self._device_alive(dev):
-                continue         # crashed mid-detection-window: frozen
-            t0 = time.monotonic()
-            n = eng.step()
-            if n:
-                self.last_round_ms[dev] = (time.monotonic() - t0) * 1e3
-            total += n
-            for r in eng.inflight():
-                entry = self.journal.get(r.request_id)
-                if entry is not None:
-                    entry.tokens = list(r.out_tokens)
-            if eng.paged:
-                self.hv.monitor.record_pages(dev, eng.pool.used_pages,
-                                             eng.pool.total_pages)
+
+    def step_engine(self, dev: str,
+                    prefill_chunk: Optional[int] = None) -> int:
+        """One guarded step of ONE engine — the unit the event loop
+        schedules per-device (each engine advances on its own cadence).
+        ``prefill_chunk`` selects the async engine path (chunked prefill
+        interleaved with decode); None keeps the lockstep ``step()``.
+        Skips engines that vanished (parked by a hand-off mid-round) or
+        froze (crashed mid-detection-window). Returns slots decoded."""
+        eng = self._engines.get(dev)
+        if eng is None or not self._device_alive(dev):
+            return 0
+        t0 = time.monotonic()
+        n = eng.step() if prefill_chunk is None \
+            else eng.step_async(prefill_chunk)
+        if n:
+            self.last_round_ms[dev] = (time.monotonic() - t0) * 1e3
+        self._sync_journal(eng)
+        if eng.paged:
+            self.hv.monitor.record_pages(dev, eng.pool.used_pages,
+                                         eng.pool.total_pages)
+        return n
+
+    def finish_round(self) -> None:
+        """Round settlement: one traffic sample (fleet-wide and per-device
+        completions) feeds the SLO-projection autoscaler, the energy
+        integral charges every un-parked device its class draw, and the
+        straggler / autoscale cadences run."""
         self.steps += 1
-        # one traffic sample per step feeds the SLO-projection autoscaler;
-        # the energy integral charges every un-parked device its class draw
         self.hv.monitor.record_traffic(self._arrivals_since_step,
                                        self._completions_since_step,
-                                       len(self._engines))
+                                       len(self._engines),
+                                       by_device=self._dev_completions)
         self._arrivals_since_step = 0
         self._completions_since_step = 0
+        self._dev_completions = {}
         self.energy += self.hv.db.active_draw()
         if self.migrate_every and self.steps % self.migrate_every == 0:
             self.rebalance()
         if self.autoscale_every and self.steps % self.autoscale_every == 0:
             self.autoscale()
+
+    def step(self) -> int:
+        """One LOCKSTEP round: a decode step on every active engine
+        (devices run concurrently in hardware; ``last_round_ms`` records
+        each device's wall time so callers can account device-parallel
+        time), bracketed by ``begin_round``/``finish_round``. The
+        event-driven loop (``runtime.events.EventLoop``) composes the same
+        three pieces but schedules ``step_engine`` per device on its own
+        event-time cadence — no fleet-wide barrier."""
+        self.begin_round()
+        total = 0
+        self.last_round_ms = {}
+        for dev in list(self._engines):
+            total += self.step_engine(dev)
+        self.finish_round()
         return total
 
     def run_until_idle(self, max_steps: int = 10000) -> bool:
@@ -432,13 +525,17 @@ class GatewayFleet:
                 sess.slice_id, step_ms * n / (total * sess.slots))
 
     def _on_finish(self, req: Request):
-        # retire the journal entry FIRST: a settled request must never be
-        # replayed by a later recovery (exactly-once accounting)
-        if self.journal.pop(req.request_id, None) is not None:
-            sanitizer.emit("journal",
-                           (self._san, req.request_id), "retire")
+        # retire the journal entry FIRST (through the flush barrier): a
+        # settled request must never be replayed by a later recovery
+        # (exactly-once accounting), and quota must never settle while
+        # the entry is dirty
+        self._retire_entry(req.request_id)
         if req.finish_reason != "cancelled":
             self._completions_since_step += 1
+            dev = self._device_of.get(req.tenant)
+            if dev is not None:
+                self._dev_completions[dev] = \
+                    self._dev_completions.get(dev, 0) + 1
         settle_finished_request(self.hv, self._sessions, req)
 
     # ------------------------------------------------------------------
@@ -465,6 +562,19 @@ class GatewayFleet:
         self._device_of[sess.tenant] = new_dev
         target = self._ensure_engine(new_dev)
         source = self._engines.get(old_dev)
+        if (self._handoff_hook is not None and source is not None
+                and source.paged and target.paged):
+            # event-driven fleet: overlap the page copy with continued
+            # decode on the source. New traffic routes to the target now
+            # (shares set below); the hook exports snapshots, marks the
+            # source draining, and schedules the drain + adoption a few
+            # ticks out (export-generation check / replay fallback there).
+            target.set_tenant_share(sess.tenant, sess.slots)
+            if target.paged:
+                vs = self.hv.db.find_slice(new)
+                target.set_tenant_pages(sess.tenant, vs.cache_pages or None)
+            self._handoff_hook(sess, old_dev, new_dev)
+            return
         moved: List[Request] = []
         payloads: Dict[int, object] = {}
         if source is not None:
@@ -472,6 +582,9 @@ class GatewayFleet:
             # by the source's next admission
             if source.paged and target.paged:
                 for r in source.inflight(sess.tenant):
+                    # flush barrier: the journal must cover everything the
+                    # snapshot covers before the entry leaves this engine
+                    self.flush_journal(r.request_id)
                     if self.faults is not None \
                             and self.faults.fail_page_copy():
                         continue         # copy lost: replay fallback
@@ -556,6 +669,7 @@ class GatewayFleet:
         """
         self._engines.pop(device_id, None)      # dataplane died with device
         self.hv.monitor.clear_pages(device_id)
+        self.hv.monitor.clear_traffic(device_id)
         tenants = [t for t, d in self._device_of.items() if d == device_id]
         event = {"device": device_id, "tenants": tenants, "resumed": 0,
                  "evicted": []}
@@ -563,9 +677,16 @@ class GatewayFleet:
             sess = self._sessions[tenant]
             # every unfinished request of this tenant was stranded by the
             # crash — queued or mid-decode, it is now an orphan awaiting
-            # either replay (below) or eviction
+            # either replay (below) or eviction. Dirty entries roll back:
+            # unflushed tokens died with the device, and replay from the
+            # last durable flush regenerates them bit-exact (greedy)
             for entry in self.journal.values():
-                if entry.tenant == tenant and not entry.req.done.is_set():
+                if entry.tenant == tenant and not entry.req.done.is_set() \
+                        and not self._held_elsewhere(entry.req):
+                    rid = entry.req.request_id
+                    if self._dirty.pop(rid, None):
+                        sanitizer.emit("journal", (self._san, rid),
+                                       "rollback")
                     _req_event(entry.req, "orphan")
             # the grant formula rides along so each degrade step asks for
             # the page grant matching ITS slot count, not the original's
@@ -593,7 +714,11 @@ class GatewayFleet:
             # journal replay in submission order (dict preserves it): the
             # tenant's FIFO survives the crash
             for entry in list(self.journal.values()):
-                if entry.tenant != tenant or entry.req.done.is_set():
+                if entry.tenant != tenant or entry.req.done.is_set() \
+                        or self._held_elsewhere(entry.req):
+                    # a surviving engine still owns it: the overlapped
+                    # hand-off source keeps decoding while its copy is in
+                    # flight — replaying here would double-decode
                     continue
                 # crash consistency: roll the request back to its durably
                 # journaled token log (tokens past it regenerate bit-exact
@@ -607,6 +732,13 @@ class GatewayFleet:
         self.hv._log("device_recovered", **event)
         return event
 
+    def _held_elsewhere(self, req: Request) -> bool:
+        """Does any surviving engine physically own this request (slot or
+        queue)? Recovery skips such requests — they are mid-overlapped-
+        hand-off on a live source and the completion event will move
+        them."""
+        return any(eng.holds(req) for eng in self._engines.values())
+
     def _evict_session(self, tenant: str, sess: TenantSession):
         """Tear down a session whose vSlice died with its device and that
         no surviving capacity can host: cancel its unfinished requests and
@@ -618,8 +750,7 @@ class GatewayFleet:
         for rid, entry in list(self.journal.items()):
             if entry.tenant != tenant or entry.req.done.is_set():
                 continue
-            del self.journal[rid]
-            sanitizer.emit("journal", (self._san, rid), "retire")
+            self._retire_entry(rid, crashed=True)
             _mark_cancelled(entry.req)
             cancelled += 1
         self._settle_outstanding(sess)
@@ -689,7 +820,13 @@ class GatewayFleet:
         Always parks empty idle engines on the way out. Returns the woken
         device id, if any."""
         queued = self.queued_by_device()
-        backlog = sum(queued.values())
+        # requests on a draining device (a scale-in target mid-drain, or
+        # an overlapped hand-off source mid-copy) are already on their way
+        # elsewhere; counting them as backlog double-counts the demand and
+        # wakes a device for traffic that is about to move — the wake/park
+        # flap across a diurnal trough
+        backlog = sum(n for dev, n in queued.items()
+                      if dev not in self._draining)
         n_active = max(1, len(self._engines))
         woken: Optional[str] = None
         signal: Optional[str] = None
@@ -738,11 +875,32 @@ class GatewayFleet:
         dev = self.elastic.pick_scale_in_device(min_active=1)
         if dev is None:
             return None
-        if not self.elastic.consolidate(dev):
+        # mark the drain target BEFORE consolidating so autoscale's
+        # backlog sample never counts its departing queue; overlapped
+        # hand-offs keep it marked until their copy completes
+        self._draining.add(dev)
+        ok = self.elastic.consolidate(dev)
+        if not ok or self._inflight_handoffs.get(dev, 0) == 0:
+            self._draining.discard(dev)
+        if not ok:
             return None
         self.autoscale_log.append({"step": self.steps, "action": "scale_in",
                                    "device": dev})
         return dev
+
+    def _handoff_begun(self, device_id: str) -> None:
+        """An overlapped hand-off started copying off ``device_id``."""
+        self._draining.add(device_id)
+        self._inflight_handoffs[device_id] = \
+            self._inflight_handoffs.get(device_id, 0) + 1
+
+    def _handoff_done(self, device_id: str) -> None:
+        n = self._inflight_handoffs.get(device_id, 0) - 1
+        if n <= 0:
+            self._inflight_handoffs.pop(device_id, None)
+            self._draining.discard(device_id)
+        else:
+            self._inflight_handoffs[device_id] = n
 
     def _page_hungriest_slices(self) -> Dict[str, str]:
         """device_id -> slice_id of the tenant holding the most pool pages

@@ -247,6 +247,21 @@ class ServingGateway:
             self.rebalance()
         return n
 
+    def step_async(self, prefill_chunk: int = 4) -> int:
+        """The chunked-prefill engine path (``BatchingEngine.step_async``)
+        behind the same telemetry/rebalance plumbing as ``step`` — newly
+        admitted prompts spend a few steps PREFILLING while the resident
+        slots keep decoding, instead of stalling the whole batch."""
+        n = self.engine.step_async(prefill_chunk)
+        if self.paged:
+            self.hv.monitor.record_pages(self._device_key,
+                                         self.engine.pool.used_pages,
+                                         self.engine.pool.total_pages)
+        if self.migrate_every and self.engine.steps \
+                and self.engine.steps % self.migrate_every == 0:
+            self.rebalance()
+        return n
+
     def run_until_idle(self, max_steps: int = 10000) -> bool:
         """Returns True when fully drained; False on a stall (max_steps
         expired, or queued work that can make no progress)."""

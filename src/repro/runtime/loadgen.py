@@ -41,6 +41,7 @@ from typing import Dict, List, Optional, Tuple
 from repro.core import ClusterSpec, Hypervisor
 from repro.core.monitor import MonitorConfig
 from repro.rc2f import AdmissionError
+from repro.runtime.events import EventLoop
 from repro.runtime.faults import FaultInjector, seeded_rng
 from repro.runtime.fleet import GatewayFleet
 
@@ -210,6 +211,7 @@ class FleetSpec:
     slo_horizon: int = 16
     migrate_every: int = 0
     device_draws: Tuple[float, ...] = ()   # heterogeneous class draws
+    device_speeds: Tuple[float, ...] = ()  # event-loop cadence multipliers
 
     def n_devices(self) -> int:
         return self.n_nodes * self.devices_per_node
@@ -222,7 +224,8 @@ def build_fleet(fleet_spec: FleetSpec, model, params, seed: int,
     inj = FaultInjector(seed=_mix(seed, "faults/" + fleet_spec.name))
     hv = Hypervisor(ClusterSpec(n_nodes=fleet_spec.n_nodes,
                                 devices_per_node=fleet_spec.devices_per_node,
-                                device_draws=fleet_spec.device_draws),
+                                device_draws=fleet_spec.device_draws,
+                                device_speeds=fleet_spec.device_speeds),
                     MonitorConfig(heartbeat_interval_s=1.0,
                                   heartbeat_deadline_s=2.5),
                     clock=inj.clock)
@@ -243,11 +246,19 @@ def build_fleet(fleet_spec: FleetSpec, model, params, seed: int,
 def replay_trace(trace: TraceSpec, fleet_spec: FleetSpec, seed: int,
                  model, params, reconfig=None, chaos: bool = False,
                  chaos_kills: int = 1, chaos_partitions: int = 1,
-                 drain_slack: int = 256) -> dict:
+                 drain_slack: int = 256, loop: str = "lockstep",
+                 prefill_chunk: int = 4) -> dict:
     """Replay one soak cell: build the fleet, open one baas session per
     tenant, feed the trace open-loop round by round, then drain. Returns
     the cell's ``BENCH_scale.json`` record — metrics only, no wall-clock
     values, so the record is a pure function of ``(trace, fleet, seed)``.
+
+    ``loop`` selects the dataplane: ``"lockstep"`` drives the fleet with
+    the round-barrier ``GatewayFleet.step``; ``"event"`` schedules each
+    arrival as a queue event at its round's tick time and drives an
+    ``EventLoop`` one control-tick window per round, so engines advance
+    on their own ``device.speed`` cadence and prefill is chunked
+    (``prefill_chunk`` tokens per engine event).
 
     Over-admission is part of the experiment: a submit the admission
     controller (tenant quota) or engine (paged worst-case) refuses counts
@@ -255,6 +266,8 @@ def replay_trace(trace: TraceSpec, fleet_spec: FleetSpec, seed: int,
     drain so a lost request can never hang the harness; whatever is still
     unfinished at the bound is reported as ``incomplete``.
     """
+    if loop not in ("lockstep", "event"):
+        raise ValueError(f"unknown loop {loop!r}")
     if trace.prompt_len_max + trace.out_tokens_max > fleet_spec.max_len:
         raise ValueError(
             f"trace {trace.name!r} worst case "
@@ -286,26 +299,45 @@ def replay_trace(trace: TraceSpec, fleet_spec: FleetSpec, seed: int,
     engines_seen: Dict[int, object] = {}
     peak_devices = 0
     rounds = 0
+
+    def _submit(a: Arrival, t0: int) -> None:
+        nonlocal rejected
+        prompt = [prompt_rng.randrange(vocab)
+                  for _ in range(a.prompt_len)]
+        try:
+            req = fleet.submit(a.tenant, prompt, a.max_new_tokens)
+        except (AdmissionError, ValueError, KeyError):
+            # quota breach, paged worst-case refusal, or a session the
+            # failover path EVICTED (reported via ``evictions``) —
+            # open-loop arrivals for it are shed, not an error
+            rejected += 1
+            return
+        outstanding.append((req, a.tenant, t0))
+
+    evloop = None
+    if loop == "event":
+        evloop = EventLoop(fleet, prefill_chunk=prefill_chunk)
+        # arrivals become queue events: scheduled up-front they carry the
+        # lowest seqs at their instant, so a round's arrivals fire before
+        # that round's control tick — same submit-then-step order as the
+        # lockstep replay
+        for a in arrivals:
+            evloop.queue.at(a.step * evloop.tick_s,
+                            lambda a=a: _submit(a, a.step),
+                            kind="arrival")
     while rounds < trace.horizon or (outstanding
                                      and rounds < trace.horizon
                                      + drain_slack):
-        for a in by_step.get(rounds, ()):
-            prompt = [prompt_rng.randrange(vocab)
-                      for _ in range(a.prompt_len)]
-            try:
-                req = fleet.submit(a.tenant, prompt, a.max_new_tokens)
-            except (AdmissionError, ValueError, KeyError):
-                # quota breach, paged worst-case refusal, or a session the
-                # failover path EVICTED (reported via ``evictions``) —
-                # open-loop arrivals for it are shed, not an error
-                rejected += 1
-                continue
-            outstanding.append((req, a.tenant, rounds))
-        fleet.step()
+        if evloop is None:
+            for a in by_step.get(rounds, ()):
+                _submit(a, rounds)
+            fleet.step()
+        else:
+            evloop.run_ticks(1)
         rounds += 1
         peak_devices = max(peak_devices, len(fleet._engines))
-        for eng in fleet._engines.values():
-            engines_seen[id(eng)] = eng
+        for dev, eng in fleet._engines.items():
+            engines_seen[id(eng)] = (dev, eng)
         still = []
         for req, tenant, t0 in outstanding:
             if not req.done.is_set():
@@ -320,8 +352,13 @@ def replay_trace(trace: TraceSpec, fleet_spec: FleetSpec, seed: int,
                 lat_by_tenant.setdefault(tenant, []).append(rounds - t0)
         outstanding = still
 
+    if evloop is not None:
+        fleet.flush_journal()          # settle lazy dirt before checking
     fleet.verify_invariants()          # pool.verify + quota == journal
-    preemptions = sum(e.preemptions for e in engines_seen.values())
+    preemptions = sum(e.preemptions for _, e in engines_seen.values())
+    steps_by_device: Dict[str, int] = {}
+    for dev, eng in engines_seen.values():
+        steps_by_device[dev] = steps_by_device.get(dev, 0) + eng.steps
     evictions = len([e for e in fleet.hv.log
                      if e.get("kind") == "failover_evict"])
     by_signal: Dict[str, int] = {}
@@ -360,12 +397,19 @@ def replay_trace(trace: TraceSpec, fleet_spec: FleetSpec, seed: int,
         "evictions": evictions,
         "energy_device_steps": round(fleet.energy, 6),
         "peak_active_devices": peak_devices,
+        "per_device_steps": {d: steps_by_device[d]
+                             for d in sorted(steps_by_device)},
         "autoscale": {"scale_out_by_signal": by_signal,
                       "scale_in": scale_ins},
     }
+    cell = {"trace": trace.name, "fleet": fleet_spec.name,
+            "seed": int(seed), "chaos": bool(chaos)}
+    if loop != "lockstep":
+        # lockstep cells keep their committed-baseline shape; event cells
+        # are tagged so records from the two loops never alias
+        cell["loop"] = loop
     record = {
-        "cell": {"trace": trace.name, "fleet": fleet_spec.name,
-                 "seed": int(seed), "chaos": bool(chaos)},
+        "cell": cell,
         "trace_spec": dataclasses.asdict(trace),
         "fleet_spec": dataclasses.asdict(fleet_spec),
         "faults": [{"step": e["step"], "kind": e["kind"],
@@ -387,11 +431,14 @@ class SoakMatrix:
     """
 
     def __init__(self, traces: List[TraceSpec], fleets: List[FleetSpec],
-                 seeds: List[int], chaos: bool = True):
+                 seeds: List[int], chaos: bool = True,
+                 loop: str = "lockstep", prefill_chunk: int = 4):
         self.traces = list(traces)
         self.fleets = list(fleets)
         self.seeds = list(seeds)
         self.chaos = chaos
+        self.loop = loop
+        self.prefill_chunk = prefill_chunk
 
     def cells(self) -> List[Tuple[TraceSpec, FleetSpec, int]]:
         return [(t, f, s) for t in self.traces for f in self.fleets
@@ -402,7 +449,9 @@ class SoakMatrix:
         records = []
         for trace, fspec, seed in self.cells():
             rec = replay_trace(trace, fspec, seed, model, params,
-                               reconfig=reconfig, chaos=self.chaos)
+                               reconfig=reconfig, chaos=self.chaos,
+                               loop=self.loop,
+                               prefill_chunk=self.prefill_chunk)
             records.append(rec)
             if progress is not None:
                 progress(rec)

@@ -125,6 +125,21 @@ def _splice_pages(pool, one, pages, start: int):
 
 
 @functools.partial(jax.jit, donate_argnums=(0,))
+def _invalidate_pool_pages(pool, pages):
+    """Reset the ``pos`` metadata of ``pages`` to -1 across every layer's
+    pool. A recycled page still carries its previous occupant's positions;
+    for the new owner those can look like valid causal history (stale
+    K/V leaking into attention), so every allocation that does not
+    overwrite the whole page must invalidate it first. Only the position
+    leaves change — k/v content is dead weight once pos is -1."""
+    def inv(path, leaf):
+        if getattr(path[-1], "key", None) == "pos":
+            return leaf.at[:, pages].set(-1)
+        return leaf
+    return jax.tree_util.tree_map_with_path(inv, pool)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
 def _copy_page(pool, src, dst):
     """Copy-on-write detach: duplicate page ``src`` into ``dst`` across
     every layer's pool (leaves are (L, P, ps, ...); axis 1 is the page)."""
@@ -163,6 +178,24 @@ class Request:
     first_token_at: Optional[float] = None
     finished_at: Optional[float] = None
     finish_reason: Optional[str] = None   # "eos" | "length" | "cancelled"
+
+
+@dataclasses.dataclass
+class _PendingPrefill:
+    """A slot admitted by the event-driven loop whose prompt prefill has
+    not yet been spliced into the shared caches. The batched prefill is
+    COMPUTED once at admission (one compiled call — recomputing it per
+    chunk would multiply the work the chunking is meant to hide) but the
+    result is only BUFFERED here; the slot is accounted ``prefill_chunk``
+    context tokens per engine event and joins decode when the accounted
+    chunks cover the context. Until then the slot is excluded from decode
+    and page-write preparation (paged slots sit at pos -1: their decode
+    rows write the null page)."""
+    chunks_left: int
+    buf: Any                    # batch-1 prefill caches (None: nothing to splice)
+    plan: Any                   # paged AdmitPlan (None on dense engines)
+    ctx_len: int                # len(prompt + replayed tokens)
+    last_token: int             # final context token -> first decode input
 
 
 def _req_event(req: Request, event: str) -> None:
@@ -239,6 +272,10 @@ class BatchingEngine:
         self._ids = id_counter if id_counter is not None \
             else itertools.count()
         self._slots: List[Optional[Request]] = [None] * n_slots
+        # slots admitted asynchronously whose prefill is still being
+        # accounted chunk-by-chunk (event-driven loop only; the lockstep
+        # path admits synchronously and never populates this)
+        self._prefilling: Dict[int, _PendingPrefill] = {}
         self.steps = 0
         self.preemptions = 0
         self._scope = sanitizer.scope()      # slot-machine key namespace
@@ -418,6 +455,7 @@ class BatchingEngine:
         """Free a slot (and its pool pages) without touching the request."""
         sanitizer.emit("slot", (self._scope, slot), "release")
         self._slots[slot] = None
+        self._prefilling.pop(slot, None)   # buffered prefill dies with it
         self._pos[slot] = -1 if self.paged else 0
         if self.paged:
             self.pool.release_slot(slot)
@@ -443,6 +481,19 @@ class BatchingEngine:
         return [r for r in self._slots
                 if r is not None and (tenant is None or r.tenant == tenant)]
 
+    def holds(self, req: Request) -> bool:
+        """Is this request physically on this engine (slotted or queued)?
+        The failover sweep consults it: an overlapped hand-off's source
+        keeps decoding a migrating tenant's requests while the page copy
+        is in flight, and if the tenant's TARGET device dies in that
+        window, recovery must not replay requests a live engine still
+        owns (double-decode)."""
+        if any(r is req for r in self._slots):
+            return True
+        with self._qlock:
+            q = self._queues.get(req.tenant)
+            return q is not None and any(r is req for r in q)
+
     def active_by_tenant(self) -> Dict[str, int]:
         counts: Dict[str, int] = {}
         for r in self._slots:
@@ -467,6 +518,19 @@ class BatchingEngine:
         return np.concatenate(
             [req.prompt,
              np.asarray(req.out_tokens, np.int32)])  # rc3e: allow-host-sync
+
+    def _invalidate_pages(self, pages) -> None:
+        """Scrub recycled pages' stale ``pos`` metadata before first use.
+        Callers that overwrite a whole page (batched splice, page import,
+        COW copy) skip this; token-at-a-time writers (legacy prefill,
+        decode into a freshly grown page) must not leave the previous
+        occupant's positions masquerading as their own history."""
+        if not self.paged or not pages:
+            return
+        self.caches = _invalidate_pool_pages(
+            self.caches,
+            jnp.asarray(np.asarray(sorted(pages),    # rc3e: allow-host-sync
+                                   np.int32)))
 
     def _page_budget_ok(self, tenant: str, extra: int) -> bool:
         budget = self._tenant_pages.get(tenant)
@@ -512,7 +576,7 @@ class BatchingEngine:
             return None
 
     # ---------------- engine loop ----------------
-    def _admit(self):
+    def _admit(self, async_chunk: Optional[int] = None):
         for slot in range(self.n_slots):
             if self._slots[slot] is not None:
                 continue
@@ -522,6 +586,11 @@ class BatchingEngine:
             self._slots[slot] = req
             sanitizer.emit("slot", (self._scope, slot), "occupy")
             _req_event(req, "admit")
+            if async_chunk is not None:
+                # event-driven admission: buffer the prefill and account
+                # it async_chunk tokens per engine event (see step_async)
+                self._start_prefill_async(slot, req, async_chunk)
+                continue
             # a request resumed after live migration replays prompt +
             # already-generated tokens so decode continues where it left off
             toks = self._ctx_tokens(req)
@@ -539,6 +608,62 @@ class BatchingEngine:
                         self._step_single(slot, int(t), i)
                 self._pos[slot] = len(toks) - 1
             req._next_input = int(toks[-1])
+            _req_event(req, "ready")   # lockstep: prefill completed inline
+
+    def _start_prefill_async(self, slot: int, req: Request, chunk: int):
+        """Admit ``req`` into ``slot`` without blocking the engine event:
+        compute the batched prefill once, buffer the result, and hand the
+        slot to ``step_async`` to account one ``chunk`` of context tokens
+        per event before it joins decode. Contexts the lockstep path
+        already handles synchronously (short, legacy-mode, or fully
+        prefix-matched paged admissions) stay synchronous — they are
+        O(chunk) work anyway — and become ready within this event."""
+        toks = self._ctx_tokens(req)
+        ctx = toks[:-1]
+        plan = None
+        if self.paged:
+            plan = self.pool.admit(slot, req.tenant, toks,
+                                   share=self.prefill_mode == "batched")
+        buf = None
+        chunks = 0
+        if plan is not None and plan.skip_prefill:
+            pass                        # every context page prefix-matched
+        elif len(ctx) >= self.PREFILL_MIN_TOKENS \
+                and self.prefill_mode == "batched":
+            _, buf = self._prefill(self.params, self._pad_ctx(ctx))
+            chunks = -(-len(ctx) // max(1, int(chunk)))   # ceil
+        else:
+            if plan is not None:
+                self._invalidate_pages(plan.write_pages)
+            for i, t in enumerate(ctx):
+                self._step_single(slot, int(t), i)
+        if self.paged:
+            # masked until ready: decode rows at -1 write the null page,
+            # and _prepare_writes skips the slot entirely
+            self._pos[slot] = -1
+        pending = _PendingPrefill(chunks, buf, plan, len(toks),
+                                  int(toks[-1]))
+        if chunks <= 0:
+            self._finish_prefill(slot, pending)
+        else:
+            self._prefilling[slot] = pending
+
+    def _finish_prefill(self, slot: int, pending: _PendingPrefill):
+        """Splice the buffered prefill and open the slot for decode."""
+        req = self._slots[slot]
+        if pending.buf is not None:
+            if self.paged:
+                plan = pending.plan
+                pages = jnp.asarray(                 # rc3e: allow-host-sync
+                    np.asarray(plan.write_pages,     # rc3e: allow-host-sync
+                               np.int32))
+                self.caches = _splice_pages(self.caches, pending.buf, pages,
+                                            start=plan.write_start)
+            else:
+                self.caches = self._splice(self.caches, pending.buf, slot)
+        self._pos[slot] = pending.ctx_len - 1
+        req._next_input = pending.last_token
+        _req_event(req, "ready")
 
     def _admit_paged(self, slot: int, req: Request, toks: np.ndarray):
         """Page-granular admission: prefix-matched pages are adopted by
@@ -553,6 +678,7 @@ class BatchingEngine:
                     and self.prefill_mode == "batched":
                 self._prefill_slot_paged(slot, ctx, plan)
             else:
+                self._invalidate_pages(plan.write_pages)
                 for i, t in enumerate(ctx):
                     self._step_single(slot, int(t), i)
         self._pos[slot] = len(toks) - 1
@@ -635,14 +761,14 @@ class BatchingEngine:
         (generated tokens survive via prefix replay)."""
         ps = self.page_size
         for i, req in enumerate(self._slots):
-            if req is None:
-                continue
+            if req is None or i in self._prefilling:
+                continue            # mid-prefill: pos is -1, nothing writes
             wpos = int(self._pos[i])
             block = wpos // ps
             if block >= len(self.pool.slot_blocks(i)):
                 if self.pool.free_pages >= 1 and \
                         self._page_budget_ok(req.tenant, 1):
-                    self.pool.grow(i, req.tenant)
+                    self._invalidate_pages([self.pool.grow(i, req.tenant)])
                 else:
                     self._preempt(i)
                 continue
@@ -668,9 +794,34 @@ class BatchingEngine:
         """One engine iteration: admit + one decode step for active slots.
         Returns number of active slots."""
         self._admit()
+        return self._decode_once()
+
+    def step_async(self, prefill_chunk: int = 4) -> int:
+        """One EVENT-DRIVEN engine iteration: admit without blocking
+        (prefills are buffered and accounted ``prefill_chunk`` context
+        tokens per event), advance pending prefills one chunk, then decode
+        the slots whose prefill already completed. Prefill no longer
+        stalls co-resident tenants' decode — the overlap the lockstep
+        ``step()`` cannot express. Token streams are bit-identical to the
+        lockstep path: the same prefill result is spliced (just later) and
+        greedy per-slot decoding is schedule-independent."""
+        self._admit(async_chunk=prefill_chunk)
+        for slot in sorted(self._prefilling):
+            pending = self._prefilling[slot]
+            pending.chunks_left -= 1
+            _req_event(self._slots[slot], "chunk")
+            if pending.chunks_left <= 0:
+                del self._prefilling[slot]
+                self._finish_prefill(slot, pending)
+        return self._decode_once()
+
+    def _decode_once(self) -> int:
+        """One decode step over every ready slot (mid-prefill slots are
+        excluded). Returns the number of slots decoded."""
         if self.paged:
             self._prepare_writes()
-        active = [i for i, r in enumerate(self._slots) if r is not None]
+        active = [i for i, r in enumerate(self._slots)
+                  if r is not None and i not in self._prefilling]
         if not active:
             return 0
         tokens = np.zeros((self.n_slots, 1), np.int32)
@@ -759,10 +910,20 @@ class BatchingEngine:
                                     self.caches)
         return None
 
-    def import_request_pages(self, req: Request, payload) -> bool:
+    def import_request_pages(self, req: Request, payload,
+                             ctx_len: Optional[int] = None) -> bool:
         """Adopt a migrated request by copying its pages into this pool —
         decode continues WITHOUT prefix replay. Returns False (caller
-        falls back to replay) when no slot, pages or budget are free."""
+        falls back to replay) when no slot, pages or budget are free.
+
+        ``ctx_len`` is the request's context length AT EXPORT TIME. The
+        overlapped hand-off keeps decoding on the source while the page
+        copy is in flight, so by adoption time the request may hold a few
+        tokens the snapshot doesn't cover; those positions
+        (``ctx_len-1 .. now-2``) are caught up by replaying just the delta
+        through the decode program — pages grown as needed — instead of
+        replaying the whole prefix. ``None`` means the snapshot is
+        current (the lockstep hand-off exports and drains atomically)."""
         if not self.paged:
             return False
         slot = next((i for i, r in enumerate(self._slots) if r is None),
@@ -778,6 +939,22 @@ class BatchingEngine:
             self.caches, jax.tree.map(jnp.asarray, payload),
             jnp.asarray(np.asarray(pages, np.int32)))
         toks = self._ctx_tokens(req)
+        base = len(toks) if ctx_len is None else int(ctx_len)
+        # catch-up: KV for positions 0..base-2 arrived with the snapshot;
+        # anything the source generated after the export is replayed here
+        for off, t in enumerate(toks[base - 1:len(toks) - 1]):
+            pos = base - 1 + off
+            if pos // self.page_size >= len(self.pool.slot_blocks(slot)):
+                if self.pool.free_pages >= 1 and \
+                        self._page_budget_ok(req.tenant, 1):
+                    self._invalidate_pages(
+                        [self.pool.grow(slot, req.tenant)])
+                else:
+                    # can't cover the delta — roll the adoption back and
+                    # let the caller fall back to prefix replay
+                    self.pool.release_slot(slot)
+                    return False
+            self._step_single(slot, int(t), pos)
         self._slots[slot] = req
         sanitizer.emit("slot", (self._scope, slot), "occupy")
         _req_event(req, "adopt")

@@ -186,6 +186,40 @@ def test_determinism_scoping_excludes_other_dirs(tmp_path):
     assert rules == {"unseeded-random"}
 
 
+ROUND_COUNTER_SRC = """
+    class Loop:
+        def bad_pace(self, fleet):
+            return fleet.steps % 4  # round-counter read
+
+        def ok_count(self, eng):
+            eng.steps += 1          # an engine counting its own steps
+            return self.ticks
+
+        def waived(self, fleet):  # rc3e: allow-round-counter
+            return fleet.steps
+    """
+
+
+def test_round_counter_flagged_in_event_loop(tmp_path):
+    ws = _ws(tmp_path, {"runtime/events.py": ROUND_COUNTER_SRC})
+    found = {(f.rule, f.symbol, f.line) for f in determinism.run(ws)}
+    assert ("round-counter", "Loop.bad_pace",
+            _line(ROUND_COUNTER_SRC, "# round-counter read")) in found
+    # stores/augassigns and the loop's own ticks are not reads of the
+    # fleet round counter; the pragma waives its whole function
+    rc_symbols = {f.symbol for f in determinism.run(ws)
+                  if f.rule == "round-counter"}
+    assert rc_symbols == {"Loop.bad_pace"}
+
+
+def test_round_counter_scoped_to_event_loop_module(tmp_path):
+    # the rule targets runtime/events.py only: the lockstep fleet reads
+    # its own round counter legitimately everywhere else
+    ws = _ws(tmp_path, {"runtime/fleet.py": ROUND_COUNTER_SRC})
+    assert not [f for f in determinism.run(ws)
+                if f.rule == "round-counter"]
+
+
 # ---------------------------------------------------------------------------
 # kernel pass
 # ---------------------------------------------------------------------------
@@ -310,8 +344,11 @@ def test_request_terminal_pops_and_stays_dead():
     s = _fresh()
     s.emit("request", 42, "submit")
     s.emit("request", 42, "admit")
+    s.emit("request", 42, "chunk")              # event loop: chunked prefill
+    s.emit("request", 42, "ready")
     s.emit("request", 42, "preempt")            # back to queue
     s.emit("request", 42, "admit")
+    s.emit("request", 42, "ready")              # lockstep: one breath
     s.emit("request", 42, "finish")
     assert s.live("request") == 0               # DONE popped: bounded memory
     # decode-after-settle: the key resolves against NEW again, where

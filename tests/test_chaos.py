@@ -22,7 +22,8 @@ from repro.analysis import sanitizer
 from repro.configs import get_config, reduced
 from repro.core import ClusterSpec, DeviceState, Hypervisor, MonitorConfig
 from repro.models import get_model
-from repro.runtime import BatchingEngine, FaultInjector, GatewayFleet
+from repro.runtime import (BatchingEngine, EventLoop, FaultInjector,
+                           GatewayFleet)
 from repro.runtime.faults import FakeClock
 
 SEEDS = [int(s) for s in
@@ -68,11 +69,14 @@ def _build_fleet(model, params, injector=None, n_nodes=4, **kw):
     return hv, fleet
 
 
-def _run_workload(cfg, model, params, injector=None, max_steps=400):
+def _run_workload(cfg, model, params, injector=None, max_steps=400,
+                  loop="lockstep", prefill_chunk=4):
     """The fixed chaos workload (identical across seeds — only the fault
     schedule varies): 6 two-slot tenants packed onto 3 devices, 2 requests
     each, one spare PARKED device. Steps the fleet with invariant checks
-    after every event until every request settles."""
+    after every event until every request settles. ``loop="event"`` drives
+    the same workload through the event queue (chunked prefill, batched
+    journal syncs, overlapped hand-offs) instead of the round barrier."""
     hv, fleet = _build_fleet(model, params, injector)
     for ti in range(N_TENANTS):
         fleet.open_session(f"t{ti}", slots=2)
@@ -83,11 +87,15 @@ def _run_workload(cfg, model, params, injector=None, max_steps=400):
             reqs[(ti, k)] = fleet.submit(
                 f"t{ti}", _prompt(cfg, 5 + ti, seed=100 + ti * 10 + k),
                 max_new_tokens=NEW_TOKENS)
+    ev = EventLoop(fleet, prefill_chunk=prefill_chunk) \
+        if loop == "event" else None
     for _ in range(max_steps):
-        fleet.step()
+        fleet.step() if ev is None else ev.run_ticks(1)
         fleet.verify_invariants()
         if all(r.done.is_set() for r in reqs.values()):
             break
+    if ev is not None:
+        fleet.flush_journal()                # drain the batched syncs
     assert all(r.done.is_set() for r in reqs.values()), \
         "workload did not drain"
     # post-drain conservation: every surviving pool returned every page,
@@ -117,6 +125,47 @@ def baseline_tokens(served_model):
     assert all(len(t) == NEW_TOKENS for t in tokens.values())
     fleet.close()
     return tokens
+
+
+# ---------------------------------------------------------------------------
+# Event-driven loop parity (satellite: lockstep vs event token exactness)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("loop,prefill_chunk",
+                         [("lockstep", 4), ("event", 4), ("event", 2)],
+                         ids=["lockstep", "event", "event-chunk2"])
+def test_loop_modes_produce_identical_token_logs(served_model,
+                                                 baseline_tokens, loop,
+                                                 prefill_chunk):
+    """Fault-free, the event-driven loop (chunked prefill, per-engine
+    cadence, batched journal syncs) must emit token logs bit-identical to
+    the lockstep barrier — the loop is a scheduling change, never a
+    results change. Exercised at two prefill chunk sizes: chunking only
+    reshapes WHEN prompt tokens are spliced, not what gets decoded."""
+    cfg, model, params = served_model
+    tokens, reqs, hv, fleet = _run_workload(
+        cfg, model, params, loop=loop, prefill_chunk=prefill_chunk)
+    assert tokens == baseline_tokens
+    fleet.close()
+
+
+@pytest.mark.parametrize("seed", SEEDS[:2])
+def test_event_loop_device_kill_recovers_bit_exact(served_model,
+                                                   baseline_tokens, seed):
+    """Chaos on the async path: a seeded device kill under the EVENT loop
+    (failover sweep runs on control ticks, not fleet rounds) still recovers
+    every in-flight request bit-exact to the fault-free run."""
+    cfg, model, params = served_model
+    inj = FaultInjector(seed=seed)
+    inj.plan_device_kill(["dev-0-0", "dev-1-0", "dev-2-0"], lo=2, hi=6)
+    tokens, reqs, hv, fleet = _run_workload(cfg, model, params,
+                                            injector=inj, loop="event")
+    kills = [e for e in inj.log if e["kind"] == "kill_device"]
+    assert len(kills) == 1
+    assert hv.db.devices[kills[0]["target"]].state == DeviceState.DEAD
+    assert fleet.recoveries and fleet.recoveries[0]["resumed"] == 4
+    assert tokens == baseline_tokens
+    fleet.close()
 
 
 # ---------------------------------------------------------------------------

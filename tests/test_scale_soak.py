@@ -129,6 +129,26 @@ def test_smoke_cell_matches_committed_baseline(served_model):
     assert rec["cell"] in [r["cell"] for r in base]
 
 
+def test_event_loop_replay_bit_identical_and_tagged(served_model):
+    """``loop="event"`` replays the cell through the event queue: two runs
+    are byte-identical (the queue's (time, seq) ordering is a pure
+    function of the schedule), the cell records its loop mode — lockstep
+    cells stay untagged so committed baselines keep their keys — and
+    chaos on the event path stays green under the sanitizer."""
+    _, model, params = served_model
+    a = replay_trace(MINI_TRACE, MINI_FLEET, 5, model, params, chaos=True,
+                     loop="event")
+    b = replay_trace(MINI_TRACE, MINI_FLEET, 5, model, params, chaos=True,
+                     loop="event")
+    assert _strip_volatile(a) == _strip_volatile(b)
+    assert a["cell"]["loop"] == "event"
+    assert a["metrics"]["completed"] > 0 and a["faults"]
+    lockstep = replay_trace(MINI_TRACE, MINI_FLEET, 5, model, params,
+                            chaos=True)
+    assert "loop" not in lockstep["cell"]
+    assert a["cell"] != lockstep["cell"]
+
+
 def test_open_loop_overload_sheds_not_stalls(served_model):
     """A trace far beyond one small fleet's capacity must finish the
     replay bounded: quota breaches surface as rejections (load shed) and
