@@ -1,0 +1,234 @@
+"""Design-space tuner benchmark: default vs tuned geometry per device
+class, persisted to ``BENCH_tuner.json``.
+
+Each modeled cell is one ``(arch, paged, device class)`` triple swept by
+``repro.tuning.tune``: every legal (kernel blocks x page size x slots x
+prefill chunk) candidate is scored by the roofline-backed cost model and
+the winner is compared against the hand-picked default geometry. The
+scores are pure math — no jax, no wall clock — so the file is a function
+of the design space and diffs cleanly across hosts; that is what makes
+the committed baseline (``benchmarks/BENCH_tuner_baseline.json``) a CI
+regression gate: ``--check`` fails when a cell's win ratio drops more
+than 10% below the baseline's, when a cell the baseline tuned a win for
+stops winning, or when any parity cell's token streams diverge.
+
+Parity cells prove the wins are free: a reduced model is served twice
+through a real two-class ``GatewayFleet`` (speeds 1.0 / 0.25) — once on
+the default geometry, once with ``autotune=True`` binding each engine
+its class's tuned winner — and the per-tenant greedy token logs must
+match bit-for-bit (geometry changes WHERE bytes move, never WHAT is
+computed).
+
+Run:
+  PYTHONPATH=src python benchmarks/kernel_tuner.py --smoke \
+      --out BENCH_tuner.json --check benchmarks/BENCH_tuner_baseline.json
+  PYTHONPATH=src python benchmarks/kernel_tuner.py   # full matrix
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BASELINE = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        "BENCH_tuner_baseline.json")
+WIN_DROP_TOLERANCE = 0.10
+
+ARCHS = ("smollm-135m", "gemma3-1b")
+SPEEDS = (1.0, 0.25)
+MAX_LEN = 2048                     # modeled serving length
+
+
+# ---------------------------------------------------------------------------
+# Modeled cells (pure math — every cell, even under --smoke)
+# ---------------------------------------------------------------------------
+
+def modeled_cells():
+    from repro.configs import get_config
+    from repro.tuning import device_class, profile_for_speed, tune
+    records = []
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        for paged in (False, True):
+            for speed in SPEEDS:
+                rep = tune(cfg, profile_for_speed(speed),
+                           max_len=MAX_LEN, paged=paged)
+                records.append({
+                    "kind": "modeled",
+                    "cell": {"arch": arch, "paged": paged,
+                             "device_class": device_class(speed)},
+                    "metrics": {
+                        "default_us_per_token":
+                            round(rep.default_cost.us_per_token, 4),
+                        "tuned_us_per_token":
+                            round(rep.best_cost.us_per_token, 4),
+                        "win": round(rep.win, 4),
+                        "geometry": rep.best.geometry_key(),
+                        "n_candidates": rep.n_candidates,
+                        "n_pruned": rep.n_pruned,
+                    }})
+    return records
+
+
+# ---------------------------------------------------------------------------
+# Parity cells (real fleet, reduced model: tuned tokens == default tokens)
+# ---------------------------------------------------------------------------
+
+def _serve_tokens(model, params, cfg, paged: bool, autotune: bool):
+    import numpy as np
+    from repro.core import ClusterSpec, Hypervisor
+    from repro.runtime import GatewayFleet
+    hv = Hypervisor(ClusterSpec(n_nodes=1, devices_per_node=2,
+                                device_speeds=SPEEDS))
+    fleet = GatewayFleet(hv, model, params, n_slots=4, max_len=64,
+                         paged=paged, page_size=8, autotune=autotune)
+    rng = np.random.default_rng(0)
+    reqs = {}
+    try:
+        # three 2-slot sessions overflow the first device: the third
+        # lands on the second (slow-class) device, so both classes serve
+        for t in ("a", "b", "c"):
+            fleet.open_session(t, slots=2)
+            prompt = rng.integers(0, cfg.vocab_size, size=6).tolist()
+            reqs[t] = fleet.submit(t, prompt, max_new_tokens=8)
+        assert fleet.run_until_idle()
+        fleet.verify_invariants()
+        return {t: list(r.out_tokens) for t, r in reqs.items()}
+    finally:
+        fleet.close()
+
+
+def parity_cells(smoke: bool, progress=None):
+    import jax
+    from repro.configs import get_config, reduced
+    from repro.models import get_model
+    records = []
+    for arch in ARCHS[:1] if smoke else ARCHS:
+        cfg = reduced(get_config(arch)).replace(dtype="float32")
+        model = get_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        for paged in (False, True):
+            base = _serve_tokens(model, params, cfg, paged, autotune=False)
+            tuned = _serve_tokens(model, params, cfg, paged, autotune=True)
+            rec = {"kind": "parity",
+                   "cell": {"arch": arch, "paged": paged},
+                   "metrics": {"tokens_match": base == tuned,
+                               "tenants": len(base)}}
+            records.append(rec)
+            if progress:
+                progress(rec)
+    return records
+
+
+# ---------------------------------------------------------------------------
+# Regression gate
+# ---------------------------------------------------------------------------
+
+def _key(rec: dict) -> str:
+    c = rec["cell"]
+    paged = "paged" if c["paged"] else "dense"
+    return f"{rec['kind']}|{c['arch']}|{paged}|{c.get('device_class', '-')}"
+
+
+def check_regression(records, baseline_path: str,
+                     tolerance: float = WIN_DROP_TOLERANCE):
+    """Returns failure strings (empty == pass). Cells absent from the
+    baseline are skipped — adding matrix cells must not fail CI."""
+    with open(baseline_path) as f:
+        base = {_key(r): r for r in json.load(f)["records"]}
+    failures = []
+    for rec in records:
+        b = base.get(_key(rec))
+        if b is None:
+            continue
+        if rec["kind"] == "parity":
+            if not rec["metrics"]["tokens_match"]:
+                failures.append(f"{_key(rec)}: tuned token stream diverged "
+                                "from default (bit-exactness broken)")
+            continue
+        got, want = rec["metrics"]["win"], b["metrics"]["win"]
+        if want > 1.0 and got <= 1.0:
+            failures.append(f"{_key(rec)}: tuner no longer beats the "
+                            f"default (win {got:.4f}, baseline {want:.4f})")
+        elif got < (1.0 - tolerance) * want:
+            failures.append(f"{_key(rec)}: win {got:.4f} < "
+                            f"{(1.0 - tolerance) * want:.4f} "
+                            f"(baseline {want:.4f}, tol {tolerance:.0%})")
+    return failures
+
+
+def write_records(records, path: str):
+    with open(path, "w") as f:
+        json.dump({"records": records}, f, indent=1, sort_keys=True)
+        f.write("\n")
+
+
+def run():
+    """benchmarks/run.py protocol: modeled cells only (fast, pure math);
+    emits one (name, win, derived) row per cell."""
+    rows = []
+    for rec in modeled_cells():
+        c, m = rec["cell"], rec["metrics"]
+        mode = "paged" if c["paged"] else "dense"
+        rows.append((
+            f"tuner.{c['arch']}.{mode}.{c['device_class']}.win",
+            m["win"],
+            f"tuned={m['tuned_us_per_token']}us;"
+            f"default={m['default_us_per_token']}us;geom={m['geometry']}"))
+    return rows
+
+
+def main() -> int:
+    sys.path.insert(0, _ROOT)
+    sys.path.insert(0, os.path.join(_ROOT, "src"))
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="parity-serve only the first arch (CI); modeled "
+                         "cells always run in full (pure math)")
+    ap.add_argument("--out", default="BENCH_tuner.json",
+                    help="where to write the records")
+    ap.add_argument("--check", nargs="?", const=BASELINE, default=None,
+                    metavar="BASELINE",
+                    help="fail when a cell's win drops >10%% below this "
+                         "baseline or parity breaks (default: committed)")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="run the full matrix and write the committed "
+                         "baseline path")
+    args = ap.parse_args()
+    t0 = time.perf_counter()
+
+    def progress(rec):
+        c, m = rec["cell"], rec["metrics"]
+        if rec["kind"] == "modeled":
+            print(f"  {_key(rec):44s} win={m['win']:.4f} "
+                  f"geom={m['geometry']}", flush=True)
+        else:
+            print(f"  {_key(rec):44s} tokens_match={m['tokens_match']}",
+                  flush=True)
+
+    records = modeled_cells()
+    for rec in records:
+        progress(rec)
+    records += parity_cells(smoke=args.smoke and not args.write_baseline,
+                            progress=progress)
+    out = BASELINE if args.write_baseline else args.out
+    write_records(records, out)
+    print(f"{len(records)} cell(s) -> {out} "
+          f"({time.perf_counter() - t0:.1f}s host wall)")
+
+    if args.check and not args.write_baseline:
+        failures = check_regression(records, args.check)
+        if failures:
+            print("TUNER REGRESSION:", file=sys.stderr)
+            for line in failures:
+                print("  " + line, file=sys.stderr)
+            return 1
+        print(f"regression check vs {args.check}: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -23,8 +23,10 @@ def run():
     rows = []
     cells = load_cells()
     if not cells:
-        return [("roofline.note", 0.0,
-                 "run `python -m repro.launch.sweep` first")]
+        # non-zero value: a zero here reads as "roofline measured 0" in
+        # the CSV; 1.0 marks an intentional not-yet-swept sentinel row
+        return [("roofline.note", 1.0,
+                 "no cells swept; run `python -m repro.launch.sweep` first")]
     n_ok = n_skip = n_err = 0
     worst = None
     for c in cells:

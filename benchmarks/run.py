@@ -11,9 +11,9 @@ _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 def main() -> None:
     sys.path.insert(0, _ROOT)
     sys.path.insert(0, os.path.join(_ROOT, "src"))
-    from benchmarks import (async_overlap, fleet_scaleout, roofline,
-                            scale_soak, table1_overhead, table2_shell,
-                            table3_matmul, table4_multitenant)
+    from benchmarks import (async_overlap, fleet_scaleout, kernel_tuner,
+                            roofline, scale_soak, table1_overhead,
+                            table2_shell, table3_matmul, table4_multitenant)
 
     modules = [
         ("table1", table1_overhead),
@@ -23,6 +23,7 @@ def main() -> None:
         ("fleet", fleet_scaleout),
         ("scale_soak", scale_soak),
         ("async_overlap", async_overlap),
+        ("kernel_tuner", kernel_tuner),
         ("roofline", roofline),
     ]
     print("name,us_per_call,derived")

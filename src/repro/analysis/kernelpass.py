@@ -235,10 +235,67 @@ def check_registry_shapes() -> List[Finding]:
     return out
 
 
+# ---------------------------------------------------------------------------
+# tuner-shapes (executed)
+# ---------------------------------------------------------------------------
+
+TUNER_ARCHS = ("smollm-135m", "gemma3-1b")   # pinned: one small, one local/
+TUNER_SPEEDS = (1.0, 0.25)                   # global-pattern arch; 2 classes
+TUNER_MAX_LEN = 2048
+
+
+def check_tuner_shapes() -> List[Finding]:
+    """Tuner-emitted geometry tiles cleanly: run the design-space sweep
+    for the pinned archs on each device class and re-verify every
+    winner against the kernel registry's divisibility rules. Executed,
+    not AST — the winners are data the model produces, and a cost-model
+    change that starts emitting a ragged geometry must fail here, not
+    in a TPU run."""
+    out: List[Finding] = []
+    try:
+        from repro.configs import registry
+        from repro.kernels import registry as kreg
+        from repro.tuning import profile_for_speed, tune
+    except Exception as e:   # missing heavy deps in a bare lint env
+        out.append(Finding(
+            PASS, "tuner-shapes", "tuning/explorer.py", 1, "",
+            f"could not import the tuner: {e}"))
+        return out
+    for name in TUNER_ARCHS:
+        cfg = registry.get_config(name)
+        for speed in TUNER_SPEEDS:
+            for paged in (False, True):
+                best = tune(cfg, profile_for_speed(speed),
+                            max_len=TUNER_MAX_LEN, paged=paged).best
+                checks = [
+                    kreg.check_decode_block(TUNER_MAX_LEN,
+                                            best.decode_block_k),
+                    kreg.check_flash_blocks(TUNER_MAX_LEN,
+                                            best.flash_block_q,
+                                            best.flash_block_k),
+                    kreg.check_head_alignment(cfg.resolved_head_dim),
+                ]
+                if paged:
+                    checks.append(kreg.check_page_size(TUNER_MAX_LEN,
+                                                       best.page_size))
+                where = f"{name}:c{speed:.2f}x:" \
+                    + ("paged" if paged else "dense")
+                for reason in checks:
+                    if reason is not None:
+                        out.append(Finding(
+                            PASS, "tuner-shapes", "tuning/explorer.py", 1,
+                            where,
+                            f"tuned geometry {best.geometry_key()} "
+                            f"violates: {reason} — the Pallas grid would "
+                            "drop the ragged tail"))
+    return out
+
+
 def run(ws: Workspace) -> List[Finding]:
     out: List[Finding] = []
     for mod in ws.select("kernels"):
         _check_traced_branch(mod, out)
         _check_grid(mod, out)
     out.extend(check_registry_shapes())
+    out.extend(check_tuner_shapes())
     return out

@@ -65,6 +65,26 @@ class EncoderConfig:
     max_frames: int = 1500
 
 
+@dataclass(frozen=True)
+class GeometryConfig:
+    """Kernel geometry for the serving dataplane — set by the auto-tuner
+    (``repro.tuning``) per device class. Defaults are literal copies of the
+    hand-picked constants in ``kernels/registry.py`` (this module stays
+    jax-free, so it cannot import them; a test pins the two in sync).
+
+    ``kernel_force`` overrides the Pallas-vs-reference dispatch in the
+    attention layers ("kernel" | "interpret" | "ref"; "" = by backend).
+    Serving-only: the Pallas paths define no VJP."""
+
+    decode_block_k: int = 512
+    flash_block_q: int = 256
+    flash_block_k: int = 256
+    mm_block_m: int = 128
+    mm_block_n: int = 128
+    mm_block_k: int = 128
+    kernel_force: str = ""
+
+
 # ---------------------------------------------------------------------------
 # Main config
 # ---------------------------------------------------------------------------
@@ -125,6 +145,9 @@ class ModelConfig:
 
     dtype: str = "bfloat16"         # activation/compute dtype
     param_dtype: str = "float32"
+
+    # serving kernel geometry (auto-tuner output; defaults = hand-picked)
+    geometry: GeometryConfig = GeometryConfig()
 
     # ---------------- derived helpers ----------------
     @property

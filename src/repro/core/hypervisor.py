@@ -116,10 +116,12 @@ class Hypervisor:
         self._log("release", slice=slice_id)
 
     def program_slice(self, slice_id: str, fn: Callable, example_inputs,
-                      static_desc: str = "") -> ProgramEntry:
-        """Configure a vSlice with a user core (full config or PR swap)."""
+                      static_desc: str = "",
+                      geometry: str = "") -> ProgramEntry:
+        """Configure a vSlice with a user core (full config or PR swap).
+        ``geometry`` keys tuned-kernel variants of one core apart."""
         entry, dt, hit = self.reconfig.partial_reconfigure(
-            fn, example_inputs, static_desc=static_desc)
+            fn, example_inputs, static_desc=static_desc, geometry=geometry)
         self.db.set_slice_state(slice_id, SliceState.CONFIGURED,
                                 program=entry.fingerprint)
         self._log("program", slice=slice_id, fingerprint=entry.fingerprint,

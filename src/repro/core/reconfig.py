@@ -6,13 +6,19 @@ FPGA mapping:
                                              into a vSlice while co-tenants run
 
 The ``ProgramCache`` is the "bitfile library": keyed by (core fingerprint,
-input avals, mesh/sharding). ``configure`` populates it (slow path);
+input avals, kernel geometry). ``configure`` populates it (slow path);
 ``partial_reconfigure`` swaps a cached executable into a slice (fast path).
 Latencies of both paths are what benchmarks/table1_overhead.py measures.
+
+The cache also persists auto-tuner winners: a side store maps
+(model fingerprint, device class) -> TunedConfig dict, JSON round-trippable
+via ``save_tuned``/``load_tuned``, so a provider's tuned library survives
+restarts the way a bitfile store would.
 """
 from __future__ import annotations
 
 import hashlib
+import json
 import threading
 import time
 from dataclasses import dataclass, field
@@ -51,26 +57,33 @@ class ProgramEntry:
 class ProgramCache:
     """Executable cache ≈ the provider's pre-built bitfile store (BAaaS).
 
-    Doubly indexed: by full key (fingerprint, input avals) for PR swaps, and
-    by fingerprint alone for the hypervisor's execute path. Optionally
-    bounded: ``max_entries`` evicts least-recently-used programs, the
-    analogue of a finite on-device bitfile library.
+    Doubly indexed: by full key (fingerprint, input avals, kernel geometry)
+    for PR swaps, and by fingerprint alone for the hypervisor's execute
+    path. Optionally bounded: ``max_entries`` evicts least-recently-used
+    programs, the analogue of a finite on-device bitfile library.
+
+    Kernel geometry is part of the key: a tuned program and the default
+    program for the same model/avals are distinct executables and must
+    never collide (the auto-tuner compiles several geometries of one
+    fingerprintable core).
     """
 
     def __init__(self, max_entries: Optional[int] = None):
         from collections import OrderedDict
         self._lock = threading.Lock()
-        self._entries: "OrderedDict[Tuple[str, str], ProgramEntry]" = \
+        self._entries: "OrderedDict[Tuple[str, str, str], ProgramEntry]" = \
             OrderedDict()
         self._by_fp: Dict[str, ProgramEntry] = {}
-        self._fp_key: Dict[str, Tuple[str, str]] = {}
+        self._fp_key: Dict[str, Tuple[str, str, str]] = {}
+        self._tuned: Dict[Tuple[str, str], dict] = {}
         self.max_entries = max_entries
         self.hits = 0
         self.misses = 0
         self.evictions = 0
 
-    def key(self, fp: str, example_inputs) -> Tuple[str, str]:
-        return (fp, _aval_key(example_inputs))
+    def key(self, fp: str, example_inputs,
+            geometry: str = "") -> Tuple[str, str, str]:
+        return (fp, _aval_key(example_inputs), geometry)
 
     def get(self, key) -> Optional[ProgramEntry]:
         with self._lock:
@@ -134,6 +147,43 @@ class ProgramCache:
     def __len__(self):
         return len(self._entries)
 
+    # ---------------- tuned-config store (auto-tuner winners) ------------
+
+    def put_tuned(self, model_fp: str, device_class: str,
+                  cfg: dict) -> None:
+        """Persist the auto-tuner's winning geometry for a
+        (model fingerprint, device class) pair."""
+        with self._lock:
+            self._tuned[(model_fp, device_class)] = dict(cfg)
+
+    def get_tuned(self, model_fp: str,
+                  device_class: str) -> Optional[dict]:
+        with self._lock:
+            rec = self._tuned.get((model_fp, device_class))
+            return dict(rec) if rec is not None else None
+
+    def tuned_configs(self) -> Dict[Tuple[str, str], dict]:
+        with self._lock:
+            return {k: dict(v) for k, v in self._tuned.items()}
+
+    def save_tuned(self, path: str) -> None:
+        """JSON-persist the tuned library (survives restarts like a
+        provider's bitfile store)."""
+        with self._lock:
+            blob = {f"{fp}|{cls}": cfg
+                    for (fp, cls), cfg in sorted(self._tuned.items())}
+        with open(path, "w") as f:
+            json.dump(blob, f, indent=2, sort_keys=True)
+
+    def load_tuned(self, path: str) -> int:
+        with open(path) as f:
+            blob = json.load(f)
+        with self._lock:
+            for key, cfg in blob.items():
+                fp, _, cls = key.partition("|")
+                self._tuned[(fp, cls)] = dict(cfg)
+        return len(blob)
+
 
 class Reconfigurator:
     """Implements full configure vs partial reconfigure for vSlices."""
@@ -144,13 +194,14 @@ class Reconfigurator:
 
     def configure(self, fn: Callable, example_inputs, *,
                   static_desc: str = "", jit_kwargs: Optional[dict] = None,
-                  keep_hlo: bool = False) -> Tuple[ProgramEntry, float]:
+                  keep_hlo: bool = False,
+                  geometry: str = "") -> Tuple[ProgramEntry, float]:
         """Full configuration: lower + compile (slow; paper's ~29 s path).
 
         Returns (entry, elapsed_seconds). Cached afterwards for PR swaps.
         """
         fp = fingerprint(fn, static_desc)
-        key = self.cache.key(fp, example_inputs)
+        key = self.cache.key(fp, example_inputs, geometry)
         t0 = time.perf_counter()
         jitted = jax.jit(fn, **(jit_kwargs or {}))
         lowered = jitted.lower(*example_inputs) if isinstance(example_inputs, tuple) \
@@ -174,14 +225,16 @@ class Reconfigurator:
         return entry, dt
 
     def partial_reconfigure(self, fn: Callable, example_inputs, *,
-                            static_desc: str = "") -> Tuple[ProgramEntry, float, bool]:
+                            static_desc: str = "",
+                            geometry: str = "") -> Tuple[ProgramEntry, float, bool]:
         """PR swap: reuse a cached executable if present (fast; ~ms), else
         fall back to full configuration. Returns (entry, seconds, was_hit)."""
         fp = fingerprint(fn, static_desc)
-        key = self.cache.key(fp, example_inputs)
+        key = self.cache.key(fp, example_inputs, geometry)
         t0 = time.perf_counter()
         entry = self.cache.get(key)
         if entry is not None:
             return entry, time.perf_counter() - t0, True
-        entry, dt = self.configure(fn, example_inputs, static_desc=static_desc)
+        entry, dt = self.configure(fn, example_inputs, static_desc=static_desc,
+                                   geometry=geometry)
         return entry, dt, False

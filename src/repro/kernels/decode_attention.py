@@ -15,6 +15,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import registry as kreg
+
 NEG_INF = -1e30
 
 
@@ -81,18 +83,22 @@ def _decode_body(q_ref, k_ref, v_ref, ks_ref, vs_ref, kpos_ref, cur_ref,
 
 
 def decode_attention(q, k, v, kpos, cur, *, window: int = 0,
-                     scale: float = 0.0, block_k: int = 512,
+                     scale: float = 0.0,
+                     block_k: int = kreg.DECODE_BLOCK_DEFAULT,
                      k_scale=None, v_scale=None, interpret: bool = False):
     """q (B, Hq, D); k/v (B, Hkv, L, D); kpos (B, L); cur (B,).
 
-    ``k_scale``/``v_scale`` (B, Hkv, L) enable the int8-cache path: k/v are
-    int8 and dequantized blockwise in VMEM. Returns (B, Hq, D)."""
+    ``block_k`` is a tunable geometry knob — legal range and divisibility
+    rule live in ``kernels.registry``. ``k_scale``/``v_scale`` (B, Hkv, L)
+    enable the int8-cache path: k/v are int8 and dequantized blockwise in
+    VMEM. Returns (B, Hq, D)."""
     B, Hq, D = q.shape
     Hkv, L = k.shape[1], k.shape[2]
     g = Hq // Hkv
     scale = scale or D ** -0.5
     bk = min(block_k, L)
-    assert L % bk == 0, (L, bk)
+    reason = kreg.check_decode_block(L, block_k)
+    assert L % bk == 0 and reason is None, (L, bk, reason)
     grid = (B * Hq, L // bk)
     quant = k_scale is not None
 

@@ -16,6 +16,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import registry as kreg
+
 NEG_INF = -1e30
 
 
@@ -70,9 +72,13 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
 
 def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
                     scale: float = 0.0, softcap: float = 0.0,
-                    block_q: int = 256, block_k: int = 256,
+                    block_q: int = kreg.FLASH_BLOCK_DEFAULT,
+                    block_k: int = kreg.FLASH_BLOCK_DEFAULT,
                     interpret: bool = False):
-    """q (B, Hq, S, D); k, v (B, Hkv, S, D). Returns (B, Hq, S, D)."""
+    """q (B, Hq, S, D); k, v (B, Hkv, S, D). Returns (B, Hq, S, D).
+
+    ``block_q``/``block_k`` are tunable geometry knobs — legal ranges and
+    divisibility rules live in ``kernels.registry``."""
     assert causal, "kernel implements the causal (decoder) case"
     B, Hq, S, D = q.shape
     Hkv = k.shape[1]
@@ -80,7 +86,8 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
     scale = scale or D ** -0.5
     bq = min(block_q, S)
     bk = min(block_k, S)
-    assert S % bq == 0 and S % bk == 0, (S, bq, bk)
+    reason = kreg.check_flash_blocks(S, block_q, block_k)
+    assert S % bq == 0 and S % bk == 0 and reason is None, (S, bq, bk, reason)
     qf = q.reshape(B * Hq, S, D)
     grid = (B * Hq, S // bq, S // bk)
 

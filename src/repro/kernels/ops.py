@@ -2,6 +2,10 @@
 
 ``force`` overrides: "kernel" (compiled pallas), "interpret" (pallas in
 interpret mode — the CPU validation path), "ref" (pure jnp).
+
+Block sizes are tunable geometry knobs (legal ranges in
+``kernels.registry``; swept by ``repro.tuning``). They are static args —
+each geometry is its own executable — and no-ops on the ref path.
 """
 from __future__ import annotations
 
@@ -11,6 +15,7 @@ from typing import Optional
 import jax
 
 from repro.kernels import ref as _ref
+from repro.kernels import registry as kreg
 from repro.kernels.decode_attention import (
     decode_attention as _decode_k,
     paged_decode_attention as _paged_decode_k)
@@ -30,31 +35,46 @@ def _mode(force: Optional[str]) -> str:
     return "kernel" if _on_tpu() else "ref"
 
 
-@functools.partial(jax.jit, static_argnames=("force",))
-def matmul(a, b, force: Optional[str] = None):
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k",
+                                             "force"))
+def matmul(a, b, block_m: int = kreg.MM_BLOCK_DEFAULT,
+           block_n: int = kreg.MM_BLOCK_DEFAULT,
+           block_k: int = kreg.MM_BLOCK_DEFAULT,
+           force: Optional[str] = None):
     m = _mode(force)
     if m == "ref":
         return _ref.matmul_ref(a, b)
-    return _mm_k(a, b, interpret=(m == "interpret"))
+    return _mm_k(a, b, block_m=block_m, block_n=block_n, block_k=block_k,
+                 interpret=(m == "interpret"))
 
 
-@functools.partial(jax.jit, static_argnames=("force",))
-def matmul_batched(a, b, force: Optional[str] = None):
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k",
+                                             "force"))
+def matmul_batched(a, b, block_m: int = kreg.MM_BLOCK_DEFAULT,
+                   block_n: int = kreg.MM_BLOCK_DEFAULT,
+                   block_k: int = kreg.MM_BLOCK_DEFAULT,
+                   force: Optional[str] = None):
     m = _mode(force)
     if m == "ref":
         return _ref.matmul_batched_ref(a, b)
-    return _mmb_k(a, b, interpret=(m == "interpret"))
+    return _mmb_k(a, b, block_m=block_m, block_n=block_n, block_k=block_k,
+                  interpret=(m == "interpret"))
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("window", "scale", "softcap", "force"))
+                   static_argnames=("window", "scale", "softcap", "block_q",
+                                    "block_k", "force"))
 def flash_attention(q, k, v, window: int = 0, scale: float = 0.0,
-                    softcap: float = 0.0, force: Optional[str] = None):
+                    softcap: float = 0.0,
+                    block_q: int = kreg.FLASH_BLOCK_DEFAULT,
+                    block_k: int = kreg.FLASH_BLOCK_DEFAULT,
+                    force: Optional[str] = None):
     m = _mode(force)
     if m == "ref":
         return _ref.flash_attention_ref(q, k, v, window=window, scale=scale,
                                         softcap=softcap)
     return _flash_k(q, k, v, window=window, scale=scale, softcap=softcap,
+                    block_q=block_q, block_k=block_k,
                     interpret=(m == "interpret"))
 
 
@@ -68,8 +88,10 @@ def ssd_chunk_scan(x, dt, Bm, Cm, a, d, chunk: int = 256,
                   interpret=(m == "interpret"))
 
 
-@functools.partial(jax.jit, static_argnames=("window", "scale", "force"))
+@functools.partial(jax.jit, static_argnames=("window", "scale", "block_k",
+                                             "force"))
 def decode_attention(q, k, v, kpos, cur, window: int = 0, scale: float = 0.0,
+                     block_k: int = kreg.DECODE_BLOCK_DEFAULT,
                      k_scale=None, v_scale=None, force: Optional[str] = None):
     m = _mode(force)
     if m == "ref":
@@ -77,7 +99,7 @@ def decode_attention(q, k, v, kpos, cur, window: int = 0, scale: float = 0.0,
                                          scale=scale, k_scale=k_scale,
                                          v_scale=v_scale)
     return _decode_k(q, k, v, kpos, cur, window=window, scale=scale,
-                     k_scale=k_scale, v_scale=v_scale,
+                     block_k=block_k, k_scale=k_scale, v_scale=v_scale,
                      interpret=(m == "interpret"))
 
 

@@ -17,6 +17,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import registry as kreg
+
 
 def _mm_kernel(a_ref, b_ref, o_ref, acc_ref, *, n_k: int):
     k = pl.program_id(2)
@@ -33,11 +35,14 @@ def _mm_kernel(a_ref, b_ref, o_ref, acc_ref, *, n_k: int):
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
 
 
-def stream_matmul(a, b, *, block_m: int = 128, block_n: int = 128,
-                  block_k: int = 128, interpret: bool = False):
+def stream_matmul(a, b, *, block_m: int = kreg.MM_BLOCK_DEFAULT,
+                  block_n: int = kreg.MM_BLOCK_DEFAULT,
+                  block_k: int = kreg.MM_BLOCK_DEFAULT,
+                  interpret: bool = False):
     """a (M, K) @ b (K, N) with MXU-aligned VMEM tiling.
 
-    Shapes are padded up to block multiples (zeros contribute nothing).
+    Block sizes are tunable geometry knobs (``kernels.registry``). Shapes
+    are padded up to block multiples (zeros contribute nothing).
     """
     M, K = a.shape
     K2, N = b.shape

@@ -19,6 +19,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import registry as kreg
 from repro.layers.norms import rms_norm, softcap
 from repro.layers.rope import apply_rope
 
@@ -41,6 +42,12 @@ class AttnOpts:
     attn_tp: str = "heads"       # "heads" | "seq": TP axis for the score
                                  # einsum; "seq" shards query positions over
                                  # "model" (for kv_heads % tp != 0 archs)
+    # tuned Pallas geometry (threaded from ModelConfig.geometry by the
+    # stage planner; swept per device class by repro.tuning)
+    decode_block_k: int = 512
+    flash_block_q: int = 256
+    flash_block_k: int = 256
+    kernel_force: str = ""       # "" = by backend | kernel|interpret|ref
 
 
 # ---------------------------------------------------------------------------
@@ -115,6 +122,61 @@ def _causal_mask(q_pos, k_pos, window: int, causal: bool, k_valid=None):
 
 
 # ---------------------------------------------------------------------------
+# Pallas dispatch (tuned geometry)
+# ---------------------------------------------------------------------------
+
+def _decode_kernel_mode(opts: AttnOpts) -> Optional[str]:
+    """Pallas mode for the decode sweep: forced, else by backend."""
+    if opts.kernel_force:
+        return None if opts.kernel_force == "ref" else opts.kernel_force
+    return "kernel" if jax.default_backend() == "tpu" else None
+
+
+def _forward_kernel_mode(opts: AttnOpts) -> Optional[str]:
+    """Pallas mode for full-sequence attention. Opt-in only
+    (``kernel_force``): attn_forward is shared with training and the flash
+    kernel defines no VJP — serving sets the force via ModelConfig.geometry."""
+    if opts.kernel_force and opts.kernel_force != "ref":
+        return opts.kernel_force
+    return None
+
+
+def _decode_kernel_attend(q, cache, positions, opts: AttnOpts, mode: str):
+    """Decode sweep via the Pallas kernel at the tuned ``decode_block_k``.
+    q (B,1,kv,g,hd) already query-scaled -> kernel scale=1."""
+    from repro.kernels import ops
+    B, _, kv, g, hd = q.shape
+    qk = q[:, 0].reshape(B, kv * g, hd)
+    kk = cache["k"].transpose(0, 2, 1, 3)        # (B, kv, L, hd)
+    vk = cache["v"].transpose(0, 2, 1, 3)
+    ks = vs = None
+    if "k_scale" in cache:
+        ks = cache["k_scale"].transpose(0, 2, 1)
+        vs = cache["v_scale"].transpose(0, 2, 1)
+    o = ops.decode_attention(qk, kk, vk, cache["pos"], positions[:, 0],
+                             window=opts.window, scale=1.0,
+                             block_k=opts.decode_block_k,
+                             k_scale=ks, v_scale=vs, force=mode)
+    return o.reshape(B, 1, kv, g, hd)
+
+
+def _flash_kernel_attend(q, k, v, opts: AttnOpts, mode: str):
+    """Prefill attention via the Pallas flash kernel at the tuned
+    (block_q, block_k) tiles. Assumes standard prefill positions
+    (``arange`` per row — the kernel masks from block offsets)."""
+    from repro.kernels import ops
+    B, S, kv, g, hd = q.shape
+    qk = q.transpose(0, 2, 3, 1, 4).reshape(B, kv * g, S, hd)
+    kk = k.transpose(0, 2, 1, 3)                 # (B, kv, S, hd)
+    vk = v.transpose(0, 2, 1, 3)
+    o = ops.flash_attention(qk, kk, vk, window=opts.window, scale=1.0,
+                            softcap=opts.softcap,
+                            block_q=opts.flash_block_q,
+                            block_k=opts.flash_block_k, force=mode)
+    return o.reshape(B, kv, g, S, hd).transpose(0, 3, 1, 2, 4)
+
+
+# ---------------------------------------------------------------------------
 # Full-sequence forward (train / prefill), query-chunked
 # ---------------------------------------------------------------------------
 
@@ -132,6 +194,7 @@ def attn_forward(p, x, positions, opts: AttnOpts,
         k_pos, k_valid = positions, None
 
     qc = opts.q_chunk
+    fmode = _forward_kernel_mode(opts)
     if opts.attn_tp == "seq":
         # indivisible kv-heads: shard QUERY positions over the model axis so
         # score compute is TP-distributed (heads replicated); k/v gathered.
@@ -141,6 +204,10 @@ def attn_forward(p, x, positions, opts: AttnOpts,
         mask = _causal_mask(positions, k_pos, opts.window, opts.causal,
                             k_valid)
         y = _attend(q, k, v, mask, opts)
+    elif (fmode is not None and opts.causal and kv_src is None
+          and kreg.check_flash_blocks(S, opts.flash_block_q,
+                                      opts.flash_block_k) is None):
+        y = _flash_kernel_attend(q, k, v, opts, fmode)
     elif qc and S > qc and S % qc == 0:
         y = _chunked_attend(q, k, v, positions, k_pos, k_valid, opts)
     else:
@@ -383,14 +450,20 @@ def attn_decode(p, x, positions, cache, opts: AttnOpts, update_cache=True):
             new["v"] = cache["v"].at[b, idx].set(v[:, 0])
         new["pos"] = cache["pos"].at[b, idx].set(positions[:, 0])
         cache = new
-    if quant:
-        k_all = _deq(cache["k"], cache["k_scale"], x.dtype)
-        v_all = _deq(cache["v"], cache["v_scale"], x.dtype)
+    dmode = _decode_kernel_mode(opts)
+    if (dmode is not None and opts.causal and not opts.softcap
+            and kreg.check_decode_block(cache["k"].shape[1],
+                                        opts.decode_block_k) is None):
+        y = _decode_kernel_attend(q, cache, positions, opts, dmode)
     else:
-        k_all, v_all = cache["k"], cache["v"]
-    kpos = cache["pos"]
-    mask = _causal_mask(positions, kpos, opts.window, opts.causal,
-                        k_valid=kpos >= 0)
-    y = _attend(q, k_all, v_all, mask, opts)
+        if quant:
+            k_all = _deq(cache["k"], cache["k_scale"], x.dtype)
+            v_all = _deq(cache["v"], cache["v_scale"], x.dtype)
+        else:
+            k_all, v_all = cache["k"], cache["v"]
+        kpos = cache["pos"]
+        mask = _causal_mask(positions, kpos, opts.window, opts.causal,
+                            k_valid=kpos >= 0)
+        y = _attend(q, k_all, v_all, mask, opts)
     out = jnp.einsum("bshgk,hgkd->bsd", y, p["wo"].astype(x.dtype))
     return out, cache

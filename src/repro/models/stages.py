@@ -116,12 +116,15 @@ def plan_stages(cfg: ModelConfig) -> Tuple[Stage, ...]:
 # ---------------------------------------------------------------------------
 
 def attn_opts(cfg: ModelConfig, site: LayerSite) -> AttnOpts:
+    g = cfg.geometry
     return AttnOpts(
         n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
         head_dim=cfg.resolved_head_dim, window=site.window, causal=cfg.causal,
         rope_theta=site.rope_theta, use_rope=cfg.use_rope,
         softcap=cfg.attn_softcap, qk_norm=cfg.qk_norm,
-        query_scale=cfg.query_scale, attn_tp=cfg.attn_tp)
+        query_scale=cfg.query_scale, attn_tp=cfg.attn_tp,
+        decode_block_k=g.decode_block_k, flash_block_q=g.flash_block_q,
+        flash_block_k=g.flash_block_k, kernel_force=g.kernel_force)
 
 
 def mla_opts(cfg: ModelConfig) -> MLAOpts:

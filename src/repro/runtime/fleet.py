@@ -40,6 +40,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.analysis.lifecycle import sanitizer
+from repro.configs.base import GeometryConfig
 from repro.core.device_db import DeviceState, SliceState
 from repro.core.elastic import ElasticController
 from repro.core.hypervisor import Hypervisor
@@ -50,6 +51,7 @@ from repro.runtime.gateway import (TenantSession, settle_finished_request,
 from repro.runtime.paged import default_pool_pages
 from repro.runtime.serve import (BatchingEngine, Request, _req_event,
                                  make_paged_serve_step, make_serve_step)
+from repro.tuning import TunedConfig, device_class, resolve_tuned
 
 
 def _mark_cancelled(req: Request) -> None:
@@ -59,6 +61,27 @@ def _mark_cancelled(req: Request) -> None:
     req.finish_reason = "cancelled"
     req.finished_at = time.monotonic()
     req.done.set()
+
+
+@dataclasses.dataclass
+class _ProgramBundle:
+    """One kernel/pool geometry's compile-ready serving program: the
+    geometry-carrying model, its serve-step fn, the abstract example the
+    reconfigurator keys on, and the pool dimensions the engines built for
+    this geometry must use. ``tuned is None`` is the fleet's default
+    (constructor args, hand-picked kernel blocks); autotuned fleets hold
+    one bundle per device class. ``fingerprint`` is stamped at first
+    compile (``_ensure_engine``) so failover can re-mark slices with the
+    program they actually run."""
+    tuned: Optional[TunedConfig]
+    model: Model
+    decode_fn: object
+    example: tuple
+    desc: str
+    geometry: str
+    n_slots: int
+    page_size: int
+    fingerprint: Optional[str] = None
 
 
 @dataclasses.dataclass
@@ -91,7 +114,8 @@ class GatewayFleet:
                  slo_p95_steps: Optional[float] = None,
                  slo_horizon: int = 16,
                  scale_in_margin: float = 0.5,
-                 faults: Optional[FaultInjector] = None):
+                 faults: Optional[FaultInjector] = None,
+                 autotune: bool = False):
         # fail fast, before any session can allocate: lazy engine creation
         # must never be the first place this surfaces (it would strand an
         # admitted tenant and its vSlice)
@@ -173,41 +197,118 @@ class GatewayFleet:
         self.steps = 0
         self.last_round_ms: Dict[str, float] = {}        # per-device step wall
 
+        # Per-device-class auto-tuning (opt-in): when set, each engine
+        # binds the geometry the design-space tuner picked for ITS
+        # device's class — kernel block sizes, slot count, KV page size —
+        # resolved through the ProgramCache's tuned-config store. Off by
+        # default so every engine shares ONE program (one fingerprint,
+        # PR cache hits fleet-wide — the paper's shared-bitstream case).
+        self.autotune = autotune
+        self._bundles: Dict[str, _ProgramBundle] = {}   # device class -> b
+
         # Compile the decode step ONCE through the hypervisor's
         # reconfigurator (full configuration); every engine spun up after
         # that binds the same executable — a PR cache hit per device.
-        example = [params, None,
+        # (Autotuned fleets still compile this default bundle: it is the
+        # failover fallback and the geometry control arm.)
+        if paged and max_len % page_size:
+            raise ValueError(f"max_len {max_len} must be a multiple of "
+                             f"page_size {page_size}")
+        bundle = self._make_bundle(None)
+        self._default_bundle = bundle
+        self._decode_fn = bundle.decode_fn
+        self._example = bundle.example
+        self._desc = bundle.desc
+        entry, dt, hit = hv.reconfig.partial_reconfigure(
+            self._decode_fn, self._example, static_desc=self._desc)
+        self.program_fingerprint = bundle.fingerprint = entry.fingerprint
+        hv._log("fleet_up", model=model.cfg.name, n_slots=n_slots,
+                fingerprint=entry.fingerprint, compile_s=dt, cache_hit=hit,
+                paged=paged, autotune=autotune)
+        # register LAST: a constructor failure above must not leave a
+        # dead fleet's listener on the shared hypervisor
+        hv.migration_listeners.append(self._on_migration)
+
+    # ------------------------------------------------------------------
+    # Program bundles (one geometry = one executable)
+    # ------------------------------------------------------------------
+    def _make_bundle(self, tuned: Optional[TunedConfig]) -> _ProgramBundle:
+        """Build the compile-ready program for one geometry. ``None`` is
+        the fleet default (constructor args); a ``TunedConfig`` threads
+        the tuner's kernel block sizes through the model config and sizes
+        the serve-step example with the tuned slot count / page size, so
+        each geometry traces (and caches) as its own executable."""
+        if tuned is None:
+            model = self.model
+            n_slots, page_size, geometry = self.n_slots, self.page_size, ""
+        else:
+            geom = GeometryConfig(
+                decode_block_k=tuned.decode_block_k,
+                flash_block_q=tuned.flash_block_q,
+                flash_block_k=tuned.flash_block_k,
+                mm_block_m=tuned.mm_block_m,
+                mm_block_n=tuned.mm_block_n,
+                mm_block_k=tuned.mm_block_k,
+                kernel_force=self.model.cfg.geometry.kernel_force)
+            model = Model(self.model.cfg.replace(geometry=geom))
+            n_slots, page_size = tuned.n_slots, tuned.page_size
+            geometry = tuned.geometry_key()
+        example = [self.params, None,
                    jnp.zeros((n_slots, 1), jnp.int32),
                    jnp.zeros((n_slots,), jnp.int32)]
-        if paged:
-            if max_len % page_size:
-                raise ValueError(f"max_len {max_len} must be a multiple of "
-                                 f"page_size {page_size}")
-            max_blocks = max_len // page_size
-            pages = cache_pages if cache_pages is not None \
+        if self.paged:
+            max_blocks = self.max_len // page_size
+            pages = self.cache_pages if self.cache_pages is not None \
                 else default_pool_pages(n_slots, max_blocks)
-            self._decode_fn = make_paged_serve_step(model)
+            decode_fn = make_paged_serve_step(model)
             example[1] = jax.eval_shape(
                 lambda: model.make_paged_caches(pages, page_size))
             example.append(jnp.zeros((n_slots, max_blocks), jnp.int32))
         else:
-            self._decode_fn = make_serve_step(model)
-            example[1] = jax.eval_shape(lambda: model.make_caches(n_slots,
-                                                                  max_len))
-        self._example = jax.tree.map(
+            decode_fn = make_serve_step(model)
+            example[1] = jax.eval_shape(
+                lambda: model.make_caches(n_slots, self.max_len))
+        example = jax.tree.map(
             lambda x: jax.ShapeDtypeStruct(jnp.shape(x), x.dtype),
             tuple(example))
-        self._desc = f"serve:{model.cfg.name}:slots{n_slots}:len{max_len}" \
-            + (f":paged{page_size}" if paged else "")
-        entry, dt, hit = hv.reconfig.partial_reconfigure(
-            self._decode_fn, self._example, static_desc=self._desc)
-        self.program_fingerprint = entry.fingerprint
-        hv._log("fleet_up", model=model.cfg.name, n_slots=n_slots,
-                fingerprint=entry.fingerprint, compile_s=dt, cache_hit=hit,
-                paged=paged)
-        # register LAST: a constructor failure above must not leave a
-        # dead fleet's listener on the shared hypervisor
-        hv.migration_listeners.append(self._on_migration)
+        desc = f"serve:{model.cfg.name}:slots{n_slots}:len{self.max_len}" \
+            + (f":paged{page_size}" if self.paged else "") \
+            + (f":geom{geometry}" if geometry else "")
+        return _ProgramBundle(tuned, model, decode_fn, example, desc,
+                              geometry, n_slots, page_size)
+
+    def _bundle_for(self, device_id: str) -> _ProgramBundle:
+        """The program bundle a device binds: the tuned geometry of its
+        device class when autotuning, the shared default otherwise. Tuned
+        configs persist in the ProgramCache keyed (model fp, class), so a
+        class's sweep runs once per cache lifetime — every later bind
+        (including cross-class hand-off destinations) is a lookup."""
+        if not self.autotune:
+            return self._default_bundle
+        speed = self.hv.db.devices[device_id].speed
+        cls = device_class(speed)
+        bundle = self._bundles.get(cls)
+        if bundle is None:
+            tuned = resolve_tuned(self.hv.reconfig.cache, self.model.cfg,
+                                  speed, max_len=self.max_len,
+                                  paged=self.paged)
+            bundle = self._make_bundle(tuned)
+            self._bundles[cls] = bundle
+            self.hv._log("autotune_bind", device_class=cls,
+                         geometry=bundle.geometry, n_slots=bundle.n_slots,
+                         page_size=bundle.page_size)
+        return bundle
+
+    def prefill_chunk_for(self, device_id: str,
+                          default: Optional[int]) -> Optional[int]:
+        """Tuned prefill chunk length for a device's class (the event
+        loop's chunked-prefill cadence); the caller's default when
+        autotuning is off or the caller runs lockstep (``None``)."""
+        if default is None or not self.autotune:
+            return default
+        bundle = self._bundle_for(device_id)
+        return bundle.tuned.prefill_chunk if bundle.tuned is not None \
+            else default
 
     # ------------------------------------------------------------------
     # Engine lifecycle (one per active device)
@@ -216,20 +317,25 @@ class GatewayFleet:
         eng = self._engines.get(device_id)
         if eng is not None:
             return eng
-        eng = BatchingEngine(self.model, self.params, n_slots=self.n_slots,
+        bundle = self._bundle_for(device_id)
+        eng = BatchingEngine(bundle.model, self.params,
+                             n_slots=bundle.n_slots,
                              max_len=self.max_len, eos_id=self.eos_id,
                              id_counter=self._req_ids, paged=self.paged,
-                             page_size=self.page_size,
+                             page_size=bundle.page_size,
                              cache_pages=self.cache_pages)
         entry, dt, hit = self.hv.reconfig.partial_reconfigure(
-            self._decode_fn, self._example, static_desc=self._desc)
+            bundle.decode_fn, bundle.example, static_desc=bundle.desc,
+            geometry=bundle.geometry)
+        bundle.fingerprint = entry.fingerprint
         eng.use_program(entry.compiled)
         eng.on_step = lambda active, ms, dev=device_id: \
             self._on_step(dev, active, ms)
         eng.on_finish = self._on_finish
         self._engines[device_id] = eng
         self.hv._log("engine_up", device=device_id,
-                     fingerprint=entry.fingerprint, swap_s=dt, cache_hit=hit)
+                     fingerprint=entry.fingerprint, swap_s=dt, cache_hit=hit,
+                     geometry=bundle.geometry or "default")
         return eng
 
     def park_idle_engines(self) -> List[str]:
@@ -274,9 +380,13 @@ class GatewayFleet:
             cache_pages=self._session_page_grant(slots))
         try:
             engine = self._ensure_engine(vs.device_id)
-            # PR-swap the shared decode program onto this tenant's slice
-            self.hv.program_slice(vs.slice_id, self._decode_fn,
-                                  self._example, static_desc=self._desc)
+            # PR-swap the decode program onto this tenant's slice — the
+            # bundle of the device's class, so an autotuned fleet binds
+            # tuned geometry with zero operator input
+            bundle = self._bundle_for(vs.device_id)
+            self.hv.program_slice(vs.slice_id, bundle.decode_fn,
+                                  bundle.example, static_desc=bundle.desc,
+                                  geometry=bundle.geometry)
             engine.set_tenant_share(tenant, slots)
             if self.paged:
                 engine.set_tenant_pages(tenant, vs.cache_pages or None)
@@ -613,6 +723,12 @@ class GatewayFleet:
                  "old_device": old_dev, "new_device": new_dev,
                  "moved_requests": len(moved), "page_copied": page_copied,
                  "replayed_inflight": replayed}
+        if self.autotune:
+            # cross-class hand-off: geometry was re-resolved for the
+            # DESTINATION class when its engine came up; record both ends
+            event["dst_geometry"] = self._bundle_for(new_dev).geometry
+            event["src_geometry"] = ("" if old_dev is None
+                                     else self._bundle_for(old_dev).geometry)
         self.handoffs.append(event)
         self.hv._log("handoff", **event)
 
@@ -703,11 +819,16 @@ class GatewayFleet:
                 self.hv.admission.release_tenant(
                     tenant, sess.service_model, sess.slots - vs.slots)
                 sess.slots = vs.slots
-            self.hv.db.set_slice_state(vs.slice_id, SliceState.CONFIGURED,
-                                       program=self.program_fingerprint)
             sess.slice_id = vs.slice_id
             self._device_of[tenant] = vs.device_id
             target = self._ensure_engine(vs.device_id)
+            # the surviving device may be a different class: mark the
+            # slice with the program fingerprint its class actually runs
+            # (stamped by _ensure_engine's compile just above)
+            self.hv.db.set_slice_state(
+                vs.slice_id, SliceState.CONFIGURED,
+                program=self._bundle_for(vs.device_id).fingerprint
+                or self.program_fingerprint)
             target.set_tenant_share(tenant, vs.slots)
             if self.paged:
                 target.set_tenant_pages(tenant, vs.cache_pages or None)

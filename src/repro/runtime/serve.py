@@ -926,6 +926,12 @@ class BatchingEngine:
         current (the lockstep hand-off exports and drains atomically)."""
         if not self.paged:
             return False
+        # geometry guard: a cross-class hand-off can land a snapshot cut
+        # at the SOURCE pool's page size on a pool tuned to a different
+        # one — the pages cannot be adopted page-for-page, so decline and
+        # let the caller fall back to prefix replay (bit-exact greedy)
+        if jax.tree.leaves(payload)[0].shape[2] != self.page_size:
+            return False
         slot = next((i for i, r in enumerate(self._slots) if r is None),
                     None)
         if slot is None:

@@ -1,0 +1,26 @@
+"""Design-space auto-tuner for dataplane geometry (CDSE discipline).
+
+``space`` declares the TunedConfig knobs and enumerates legal candidates,
+``cost_model`` scores each candidate with a roofline-backed analytical
+model under hard VMEM/HBM/divisibility constraints, and ``explorer``
+sweeps the space and persists the winner per (model fingerprint, device
+class) in the ProgramCache — so the hypervisor binds tuned programs
+automatically, per device class, with zero operator input.
+
+All of it is pure math — no device, no tracing, deterministic across
+hosts (the benchmark JSON diffs cleanly in CI). The only import weight
+is ``kernels.registry`` via the ``repro.kernels`` package; the analysis
+pass guards its import accordingly.
+"""
+from repro.tuning.cost_model import (DeviceProfile, candidate_cost,
+                                     profile_for_speed, prune_reason)
+from repro.tuning.explorer import (device_class, model_fingerprint,
+                                   resolve_tuned, tune)
+from repro.tuning.space import (TunedConfig, enumerate_candidates,
+                                legal_reason)
+
+__all__ = [
+    "TunedConfig", "enumerate_candidates", "legal_reason",
+    "DeviceProfile", "profile_for_speed", "prune_reason", "candidate_cost",
+    "tune", "resolve_tuned", "device_class", "model_fingerprint",
+]

@@ -1,0 +1,98 @@
+"""The tunable design space: one frozen ``TunedConfig`` per candidate.
+
+Knobs cover every geometry decision the dataplane makes:
+
+  decode_block_k          Pallas decode-attention cache-sweep block
+  flash_block_q/_k        Pallas flash-attention prefill tiles
+  mm_block_m/_n/_k        Pallas stream-matmul tiles
+  page_size               KV pool page length (paged serving)
+  n_slots                 decode slots per device
+  prefill_chunk           async-loop prefill chunk (requests per slice)
+
+``enumerate_candidates`` yields every combination that passes the
+kernels' own divisibility rules (``repro.kernels.registry``); resource
+fits are the cost model's job.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import asdict, dataclass, replace
+from typing import Iterator, Optional
+
+from repro.kernels import registry as kreg
+
+
+@dataclass(frozen=True)
+class TunedConfig:
+    decode_block_k: int = kreg.DECODE_BLOCK_DEFAULT
+    flash_block_q: int = kreg.FLASH_BLOCK_DEFAULT
+    flash_block_k: int = kreg.FLASH_BLOCK_DEFAULT
+    mm_block_m: int = kreg.MM_BLOCK_DEFAULT
+    mm_block_n: int = kreg.MM_BLOCK_DEFAULT
+    mm_block_k: int = kreg.MM_BLOCK_DEFAULT
+    page_size: int = kreg.PAGE_SIZE_DEFAULT
+    n_slots: int = kreg.SLOTS_DEFAULT
+    prefill_chunk: int = kreg.PREFILL_CHUNK_DEFAULT
+
+    def geometry_key(self) -> str:
+        """Compact stable string — becomes part of the ProgramCache key and
+        the program descriptor, so tuned/default programs never collide."""
+        return (f"dk{self.decode_block_k}"
+                f".fq{self.flash_block_q}.fk{self.flash_block_k}"
+                f".mm{self.mm_block_m}x{self.mm_block_n}x{self.mm_block_k}"
+                f".ps{self.page_size}.s{self.n_slots}.pc{self.prefill_chunk}")
+
+    def to_dict(self) -> dict:
+        return asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "TunedConfig":
+        return cls(**{k: int(v) for k, v in d.items()
+                      if k in cls.__dataclass_fields__})
+
+    def replace(self, **kw) -> "TunedConfig":
+        return replace(self, **kw)
+
+
+DEFAULT = TunedConfig()
+
+
+def legal_reason(cand: TunedConfig, *, max_len: int, head_dim: int,
+                 paged: bool) -> Optional[str]:
+    """Divisibility legality (mirrors the kernels' own asserts). Returns
+    None when legal, else the first violated rule."""
+    r = kreg.check_decode_block(max_len, cand.decode_block_k)
+    if r is None:
+        r = kreg.check_flash_blocks(max_len, cand.flash_block_q,
+                                    cand.flash_block_k)
+    if r is None and paged:
+        r = kreg.check_page_size(max_len, cand.page_size)
+        if r is None and cand.decode_block_k % cand.page_size != 0 \
+                and cand.page_size % cand.decode_block_k != 0:
+            r = (f"decode block_k={cand.decode_block_k} and "
+                 f"page_size={cand.page_size} do not nest")
+    if r is None:
+        r = kreg.check_head_alignment(head_dim)
+    if r is None and max_len % cand.n_slots != 0 and cand.n_slots > max_len:
+        r = f"n_slots={cand.n_slots} > max_len={max_len}"
+    return r
+
+
+def enumerate_candidates(*, max_len: int, head_dim: int,
+                         paged: bool) -> Iterator[TunedConfig]:
+    """Every divisibility-legal combination. Matmul tiles sweep a square
+    subset (bm=bn=bk) — rectangular tiles add little on the MXU and cube
+    the space."""
+    page_sizes = kreg.PAGE_SIZE_CHOICES if paged \
+        else (kreg.PAGE_SIZE_DEFAULT,)
+    for (dk, fq, fk, mm, ps, ns, pc) in itertools.product(
+            kreg.DECODE_BLOCK_CHOICES, kreg.FLASH_BLOCK_CHOICES,
+            kreg.FLASH_BLOCK_CHOICES, kreg.MM_BLOCK_CHOICES,
+            page_sizes, kreg.SLOTS_CHOICES, kreg.PREFILL_CHUNK_CHOICES):
+        cand = TunedConfig(
+            decode_block_k=dk, flash_block_q=fq, flash_block_k=fk,
+            mm_block_m=mm, mm_block_n=mm, mm_block_k=mm,
+            page_size=ps, n_slots=ns, prefill_chunk=pc)
+        if legal_reason(cand, max_len=max_len, head_dim=head_dim,
+                        paged=paged) is None:
+            yield cand

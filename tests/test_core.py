@@ -147,6 +147,44 @@ def test_pr_cache_hit_is_fast():
     assert t_pr < t_full  # paper Table I: PR ≪ full configuration
 
 
+def test_cache_keys_geometry_variants_apart():
+    """Tuned and default geometry of the SAME core + avals are distinct
+    executables: they must coexist in the cache (no collision) and each
+    geometry must hit only its own entry on re-bind."""
+    import numpy as np
+    from repro.core import ProgramCache, Reconfigurator
+    rc = Reconfigurator(ProgramCache())
+    ex = (np.ones((4, 4), np.float32),) * 2
+    _, _, hit_def = rc.partial_reconfigure(_mm_core, ex)
+    _, _, hit_tuned = rc.partial_reconfigure(_mm_core, ex,
+                                             geometry="dk1024.s8")
+    assert not hit_def and not hit_tuned     # no cross-geometry collision
+    assert len(rc.cache) == 2
+    assert rc.partial_reconfigure(_mm_core, ex)[2]
+    assert rc.partial_reconfigure(_mm_core, ex, geometry="dk1024.s8")[2]
+    assert not rc.partial_reconfigure(_mm_core, ex, geometry="dk256.s2")[2]
+
+
+def test_mixed_geometry_eviction_repoints_fp_index():
+    """A bounded cache holding several geometry variants of one
+    fingerprint: LRU eviction drops exactly one variant, the public
+    fingerprint index repoints at a survivor, and the evicted geometry
+    misses (recompiles) while the survivors still hit."""
+    import numpy as np
+    from repro.core import ProgramCache, Reconfigurator
+    rc = Reconfigurator(ProgramCache(max_entries=2))
+    ex = (np.ones((4, 4), np.float32),) * 2
+    e_def, _ = rc.configure(_mm_core, ex)
+    e_g2, _ = rc.configure(_mm_core, ex, geometry="g2")
+    e_g3, _ = rc.configure(_mm_core, ex, geometry="g3")  # evicts default
+    assert len(rc.cache) == 2 and rc.cache.evictions == 1
+    assert e_def.fingerprint == e_g2.fingerprint == e_g3.fingerprint
+    # the fingerprint stayed resolvable through a surviving variant
+    assert rc.cache.entry_for(e_def.fingerprint) in (e_g2, e_g3)
+    assert rc.partial_reconfigure(_mm_core, ex, geometry="g2")[2]
+    assert not rc.partial_reconfigure(_mm_core, ex)[2]   # default evicted
+
+
 def test_rsaas_full_device_and_run():
     import numpy as np
     hv = Hypervisor(ClusterSpec())

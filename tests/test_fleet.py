@@ -220,6 +220,66 @@ def test_directed_migration_api(served_model):
     fleet.close()
 
 
+def test_cross_class_handoff_reresolves_geometry(served_model):
+    """A hand-off between device CLASSES must re-resolve the tuned
+    geometry on the destination: the target engine binds ITS class's
+    winner from the ProgramCache tuned store (here seeded with two
+    deliberately different geometries), pages cut at the source's page
+    size are declined by the import guard (prefix replay instead), and
+    the token stream stays bit-identical to an unmigrated default run."""
+    from repro.tuning import TunedConfig, device_class, model_fingerprint
+    cfg, model, params = served_model
+    hv = Hypervisor(ClusterSpec(n_nodes=1, devices_per_node=2,
+                                device_speeds=(1.0, 0.25)))
+    fp = model_fingerprint(model.cfg, 64, True)
+    hv.reconfig.cache.put_tuned(
+        fp, device_class(1.0), TunedConfig(page_size=8,
+                                           n_slots=4).to_dict())
+    hv.reconfig.cache.put_tuned(
+        fp, device_class(0.25), TunedConfig(decode_block_k=256,
+                                            page_size=16,
+                                            n_slots=2).to_dict())
+    fleet = GatewayFleet(hv, model, params, n_slots=2, max_len=64,
+                         paged=True, page_size=8, autotune=True)
+    t = fleet.open_session("t", slots=1)
+    src = fleet.device_of("t")
+    assert fleet._engines[src].page_size == 8          # fast-class winner
+    req = fleet.submit("t", _prompt(cfg), max_new_tokens=8)
+    for _ in range(3):
+        fleet.step()
+    pre = list(req.out_tokens)
+    assert pre and not req.done.is_set()
+
+    dst = next(d for d in hv.db.devices if d != src)
+    assert hv.db.devices[src].speed != hv.db.devices[dst].speed
+    hv.migrate_slice(t.slice_id, target_device=dst, reason="ops")
+    assert fleet.device_of("t") == dst
+    # destination bound the 0.25x-class geometry, not the source's
+    assert fleet._engines[dst].page_size == 16
+    assert fleet._engines[dst].n_slots == 2
+    ev = fleet.handoffs[-1]
+    assert ev["src_geometry"] != ev["dst_geometry"]
+    # page snapshot was cut at ps=8 — the ps=16 pool must decline it and
+    # fall back to prefix replay (bit-exact greedy), never adopt raggedly
+    assert ev["page_copied"] == 0 and ev["replayed_inflight"] == 1
+
+    fleet.run_until_idle()
+    assert req.out_tokens[:len(pre)] == pre            # tokens preserved
+    assert len(req.out_tokens) == 8
+    fleet.verify_invariants()
+    fleet.close()
+
+    # bit-exactness across the migration + both tuned geometries
+    hv2 = Hypervisor(ClusterSpec(n_nodes=1, devices_per_node=1))
+    fleet2 = GatewayFleet(hv2, model, params, n_slots=2, max_len=64,
+                          paged=True, page_size=8)
+    fleet2.open_session("t", slots=1)
+    ref = fleet2.submit("t", _prompt(cfg), max_new_tokens=8)
+    fleet2.run_until_idle()
+    assert list(req.out_tokens) == list(ref.out_tokens)
+    fleet2.close()
+
+
 # ---------------------------------------------------------------------------
 # Elastic scale-up / park lifecycle
 # ---------------------------------------------------------------------------

@@ -1,0 +1,233 @@
+"""Auto-tuner tests: design-space legality, roofline cost-model pruning
+and per-class divergence, tuned-config persistence in the ProgramCache,
+the GeometryConfig/registry default pin, and the bit-exactness matrix —
+every tuner-emitted geometry must serve the same greedy token streams as
+the default, dense and paged, lockstep and event-driven."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.configs.base import GeometryConfig
+from repro.core import ClusterSpec, Hypervisor
+from repro.kernels import registry as kreg
+from repro.models import get_model
+from repro.runtime import EventLoop, GatewayFleet
+from repro.tuning import (TunedConfig, candidate_cost, device_class,
+                          enumerate_candidates, legal_reason,
+                          model_fingerprint, profile_for_speed,
+                          prune_reason, resolve_tuned, tune)
+from repro.tuning.cost_model import DeviceProfile
+
+
+@pytest.fixture(scope="module")
+def served_model():
+    cfg = reduced(get_config("smollm-135m")).replace(dtype="float32")
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+# ---------------------------------------------------------------------------
+# Defaults pin: configs/base.py stays jax-free, so its GeometryConfig
+# literals duplicate kernels/registry.py — this test is the sync contract
+# ---------------------------------------------------------------------------
+
+def test_geometry_defaults_pinned_to_registry():
+    g = GeometryConfig()
+    assert g.decode_block_k == kreg.DECODE_BLOCK_DEFAULT
+    assert g.flash_block_q == g.flash_block_k == kreg.FLASH_BLOCK_DEFAULT
+    assert g.mm_block_m == g.mm_block_n == g.mm_block_k \
+        == kreg.MM_BLOCK_DEFAULT
+    t = TunedConfig()
+    assert t.decode_block_k == kreg.DECODE_BLOCK_DEFAULT
+    assert t.flash_block_q == t.flash_block_k == kreg.FLASH_BLOCK_DEFAULT
+    assert t.mm_block_m == kreg.MM_BLOCK_DEFAULT
+    assert t.page_size == kreg.PAGE_SIZE_DEFAULT
+    assert t.n_slots == kreg.SLOTS_DEFAULT
+    assert t.prefill_chunk == kreg.PREFILL_CHUNK_DEFAULT
+
+
+# ---------------------------------------------------------------------------
+# Design space
+# ---------------------------------------------------------------------------
+
+def test_enumerated_candidates_are_legal():
+    """Every candidate the sweep yields satisfies the registry's
+    divisibility rules; the shipped default is in the space (the tuner
+    can never do worse than it)."""
+    for paged in (False, True):
+        cands = list(enumerate_candidates(max_len=2048, head_dim=64,
+                                          paged=paged))
+        assert cands
+        for c in cands:
+            assert legal_reason(c, max_len=2048, head_dim=64,
+                                paged=paged) is None
+        assert TunedConfig() in cands   # the default is always reachable
+
+
+def test_illegal_geometry_is_rejected():
+    assert legal_reason(TunedConfig(decode_block_k=384), max_len=2048,
+                        head_dim=64, paged=False) is not None
+    assert legal_reason(TunedConfig(page_size=48), max_len=2048,
+                        head_dim=64, paged=True) is not None
+    assert legal_reason(TunedConfig(), max_len=2048, head_dim=60,
+                        paged=False) is not None   # lane misalignment
+
+
+# ---------------------------------------------------------------------------
+# Cost model: hard pruning + per-class divergence
+# ---------------------------------------------------------------------------
+
+def test_prune_on_vmem_and_hbm():
+    cfg = get_config("smollm-135m")
+    tiny_vmem = DeviceProfile("tiny-vmem", 1.0, 1e12, 1e11,
+                              vmem_bytes=1024, hbm_bytes=16 * 2 ** 30)
+    r = prune_reason(TunedConfig(), cfg, tiny_vmem, max_len=2048,
+                     paged=False)
+    assert r is not None and r.startswith("VMEM")
+    tiny_hbm = DeviceProfile("tiny-hbm", 1.0, 1e12, 1e11,
+                             vmem_bytes=16 * 2 ** 20, hbm_bytes=1024)
+    r = prune_reason(TunedConfig(), cfg, tiny_hbm, max_len=2048,
+                     paged=False)
+    assert r is not None and r.startswith("HBM")
+    ok = profile_for_speed(1.0)
+    assert prune_reason(TunedConfig(), cfg, ok, max_len=2048,
+                        paged=False) is None
+    pruned = candidate_cost(TunedConfig(), cfg, tiny_vmem, max_len=2048,
+                            paged=False)
+    assert pruned.pruned is not None \
+        and pruned.us_per_token == float("inf")
+
+
+def test_small_class_gets_half_memory():
+    assert profile_for_speed(0.25).vmem_bytes \
+        == profile_for_speed(1.0).vmem_bytes // 2
+    assert profile_for_speed(0.25).hbm_bytes \
+        == profile_for_speed(1.0).hbm_bytes // 2
+
+
+def test_tuner_beats_default_and_classes_diverge():
+    """The tentpole claim: the sweep finds geometry strictly better than
+    the hand-picked default on BOTH device classes, and the two classes
+    get DIFFERENT geometry (engines on fast vs 0.25x parts should not
+    run the same blocks)."""
+    cfg = get_config("gemma3-1b")
+    fast = tune(cfg, profile_for_speed(1.0), max_len=2048, paged=False)
+    slow = tune(cfg, profile_for_speed(0.25), max_len=2048, paged=False)
+    assert fast.win > 1.0 and slow.win > 1.0
+    assert fast.best != slow.best
+    assert fast.best.decode_block_k >= slow.best.decode_block_k
+
+
+def test_tune_is_deterministic():
+    cfg = get_config("smollm-135m")
+    a = tune(cfg, profile_for_speed(0.25), max_len=2048, paged=True)
+    b = tune(cfg, profile_for_speed(0.25), max_len=2048, paged=True)
+    assert a.best == b.best
+    assert [c.geometry_key() for c, _ in a.table] \
+        == [c.geometry_key() for c, _ in b.table]
+
+
+# ---------------------------------------------------------------------------
+# Persistence: ProgramCache tuned-config store
+# ---------------------------------------------------------------------------
+
+def test_tuned_store_roundtrip(tmp_path):
+    from repro.core import ProgramCache
+    pc = ProgramCache()
+    cfg = TunedConfig(decode_block_k=1024, n_slots=8)
+    pc.put_tuned("fp0", "c1.00x", cfg.to_dict())
+    pc.put_tuned("fp0", "c0.25x", TunedConfig(decode_block_k=256).to_dict())
+    assert TunedConfig.from_dict(pc.get_tuned("fp0", "c1.00x")) == cfg
+    path = str(tmp_path / "tuned.json")
+    pc.save_tuned(path)
+    pc2 = ProgramCache()
+    assert pc2.load_tuned(path) == 2
+    assert pc2.tuned_configs() == pc.tuned_configs()
+    assert pc2.get_tuned("fp0", "c9.99x") is None
+
+
+def test_resolve_tuned_prefers_persisted_winner():
+    """resolve_tuned is a store lookup first — a pre-seeded (restored)
+    winner is honored verbatim, no re-sweep."""
+    from repro.core import ProgramCache
+    cfg = get_config("smollm-135m")
+    pc = ProgramCache()
+    fp = model_fingerprint(cfg, 2048, False)
+    seeded = TunedConfig(decode_block_k=128, n_slots=2)
+    pc.put_tuned(fp, device_class(1.0), seeded.to_dict())
+    assert resolve_tuned(pc, cfg, 1.0, max_len=2048, paged=False) == seeded
+    # an unseen class tunes once, then hits the store
+    first = resolve_tuned(pc, cfg, 0.25, max_len=2048, paged=False)
+    assert pc.get_tuned(fp, device_class(0.25)) == first.to_dict()
+    assert resolve_tuned(pc, cfg, 0.25, max_len=2048, paged=False) == first
+
+
+# ---------------------------------------------------------------------------
+# Bit-exactness matrix (the tuner changes WHERE bytes move, never WHAT
+# is computed): every geometry the tuner emits across the benchmark's
+# class matrix serves identical greedy token streams
+# ---------------------------------------------------------------------------
+
+def _tuner_winner_geometries():
+    """Distinct winners across (class, mode) for the served arch."""
+    cfg = get_config("smollm-135m")
+    geoms = {}
+    for paged in (False, True):
+        for speed in (1.0, 0.25):
+            best = tune(cfg, profile_for_speed(speed), max_len=2048,
+                        paged=paged).best
+            geoms[best.geometry_key()] = best
+    return sorted(geoms.items())
+
+
+def _serve(model, params, cfg, tuned, paged, loop):
+    """Serve three tenants on a two-class fleet with the given geometry
+    (None = shipped default); returns per-tenant token logs."""
+    from repro.models.api import Model
+    if tuned is None:
+        m, n_slots, page_size = model, 4, 8
+    else:
+        geom = GeometryConfig(decode_block_k=tuned.decode_block_k,
+                              flash_block_q=tuned.flash_block_q,
+                              flash_block_k=tuned.flash_block_k,
+                              mm_block_m=tuned.mm_block_m,
+                              mm_block_n=tuned.mm_block_n,
+                              mm_block_k=tuned.mm_block_k)
+        m = Model(cfg.replace(geometry=geom))
+        n_slots, page_size = tuned.n_slots, min(tuned.page_size, 64)
+    hv = Hypervisor(ClusterSpec(n_nodes=1, devices_per_node=2,
+                                device_speeds=(1.0, 0.25)))
+    fleet = GatewayFleet(hv, m, params, n_slots=n_slots, max_len=64,
+                         paged=paged, page_size=page_size)
+    ev = EventLoop(fleet) if loop == "event" else None
+    try:
+        rng = np.random.default_rng(0)
+        reqs = {}
+        for t in ("a", "b", "c"):
+            fleet.open_session(t, slots=1)
+            prompt = rng.integers(0, cfg.vocab_size, size=6).tolist()
+            reqs[t] = fleet.submit(t, prompt, max_new_tokens=8)
+        for _ in range(400):
+            fleet.step() if ev is None else ev.run_ticks(1)
+            if all(r.done.is_set() for r in reqs.values()):
+                break
+        assert all(r.done.is_set() for r in reqs.values())
+        fleet.verify_invariants()
+        return {t: list(r.out_tokens) for t, r in reqs.items()}
+    finally:
+        fleet.close()
+
+
+@pytest.mark.parametrize("loop", ["lockstep", "event"])
+@pytest.mark.parametrize("paged", [False, True],
+                         ids=["dense", "paged"])
+@pytest.mark.parametrize(("gkey", "tuned"), _tuner_winner_geometries(),
+                         ids=lambda v: v if isinstance(v, str) else "")
+def test_tuned_geometry_is_bit_exact(served_model, gkey, tuned, paged,
+                                     loop):
+    cfg, model, params = served_model
+    base = _serve(model, params, cfg, None, paged, loop)
+    got = _serve(model, params, cfg, tuned, paged, loop)
+    assert got == base, f"geometry {gkey} diverged under {loop}"
