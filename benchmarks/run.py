@@ -12,8 +12,9 @@ def main() -> None:
     sys.path.insert(0, _ROOT)
     sys.path.insert(0, os.path.join(_ROOT, "src"))
     from benchmarks import (async_overlap, fleet_scaleout, kernel_tuner,
-                            roofline, scale_soak, table1_overhead,
-                            table2_shell, table3_matmul, table4_multitenant)
+                            roofline, scale_soak, scrub_overhead,
+                            table1_overhead, table2_shell, table3_matmul,
+                            table4_multitenant)
 
     modules = [
         ("table1", table1_overhead),
@@ -24,6 +25,7 @@ def main() -> None:
         ("scale_soak", scale_soak),
         ("async_overlap", async_overlap),
         ("kernel_tuner", kernel_tuner),
+        ("scrub_overhead", scrub_overhead),
         ("roofline", roofline),
     ]
     print("name,us_per_call,derived")

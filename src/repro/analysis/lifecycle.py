@@ -91,11 +91,15 @@ MACHINES: Dict[str, Machine] = {
         }),
     # One KV-cache page in the pool. alloc/free must alternate; shares
     # (prefix-adoption increfs) and unshares (COW detach) only while
-    # allocated — a decref of a free page is a double-free.
+    # allocated — a decref of a free page is a double-free. ``scrub``
+    # (zero-on-free) is only legal while FREE: a scrub racing a
+    # reallocation would zero a live tenant's KV and is the exact bug
+    # class the isolation hardening must never ship.
     "page": Machine(
         initial="FREE",
         transitions={
             ("FREE", "alloc"): "USED",
+            ("FREE", "scrub"): "FREE",
             ("USED", "share"): "USED",
             ("USED", "unshare"): "USED",
             ("USED", "free"): "FREE",

@@ -28,6 +28,13 @@ Rules:
   * **unretired-cancel** — a function marking fleet requests cancelled
     (``_mark_cancelled``) without retiring their journal entries in the
     same function: a settled request could later be replayed.
+  * **unscrubbed-free** — a function allocating pool pages
+    (``pool.admit``/``pool.grow``/``pool.cow`` — every path that can hand
+    a RECYCLED page to a new tenant) without the zero-on-free flush
+    (``_flush_scrub``/``take_scrub``) anywhere in the same function: a
+    freed tenant's KV could be re-exposed through a recycled page. The
+    dynamic backstop is ``PagePoolManager._alloc_one``'s pending-scrub
+    assert; this catches the bypass at rest.
 """
 from __future__ import annotations
 
@@ -97,6 +104,12 @@ SAFE_CALLS = {
 
 JOURNAL_MARK = "_mark_cancelled"
 JOURNAL_RETIRE_CALLS = {"_on_finish", "cancel_queued", "_retire_entry"}
+
+# Every PagePoolManager entry point that can hand a RECYCLED page to a new
+# tenant, and the scrub hooks that must run first (the engine's batched
+# device-side zeroing, or a direct drain of the pending-scrub queue).
+POOL_RECYCLE_CALLS = frozenset({"admit", "grow", "cow"})
+SCRUB_HOOKS = frozenset({"_flush_scrub", "take_scrub"})
 
 
 def _is_fallible(stmt: ast.stmt) -> Optional[ast.AST]:
@@ -242,6 +255,35 @@ def _check_discarded(mod: ModuleInfo, out: List[Finding]):
             "can never be released"))
 
 
+def _check_unscrubbed(fi, out: List[Finding]):
+    """Pool allocation sites must sit behind the zero-on-free flush: a
+    function calling ``pool.admit``/``pool.grow``/``pool.cow`` without a
+    scrub hook in the same function can re-expose a freed tenant's KV
+    through a recycled page. (``_alloc_one``'s pending-scrub assert is the
+    dynamic backstop; this flags the bypass at rest.)"""
+    if fi.callees & SCRUB_HOOKS:
+        return
+    mod = fi.module
+    for node in ast.walk(fi.node):
+        if not isinstance(node, ast.Call) \
+                or call_name(node) not in POOL_RECYCLE_CALLS:
+            continue
+        recv = node.func.value if isinstance(node.func, ast.Attribute) \
+            else None
+        recv_name = recv.attr if isinstance(recv, ast.Attribute) else \
+            recv.id if isinstance(recv, ast.Name) else None
+        if recv_name != "pool":
+            continue
+        if mod.allows(node.lineno, "unscrubbed-free", fi.node):
+            continue
+        out.append(Finding(
+            PASS, "unscrubbed-free", mod.rel, node.lineno, fi.qualname,
+            f"pool pages allocated via {dotted_call(node)}() with no "
+            "zero-on-free flush in this function: a recycled page may "
+            "still hold a freed tenant's KV — call _flush_scrub() (or "
+            "drain take_scrub()) before any pool allocation"))
+
+
 def _check_journal(mod: ModuleInfo, out: List[Finding]):
     """Functions cancelling journaled requests must retire the journal
     entry in the same function (pop/del/_on_finish) — a settled request
@@ -286,6 +328,7 @@ def run(ws: Workspace) -> List[Finding]:
         for fi in mod.functions:
             for rule in RULES:
                 _check_unguarded(fi, rule, out)
+            _check_unscrubbed(fi, out)
         _check_discarded(mod, out)
         _check_journal(mod, out)
     return out

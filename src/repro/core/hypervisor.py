@@ -75,8 +75,10 @@ class Hypervisor:
         self.monitor = Monitor(self.db,
                                monitor_cfg if monitor_cfg is not None
                                else MonitorConfig(), clock)
+        # the controller's rate-limit buckets refill on the hypervisor's
+        # clock — a FakeClock-driven harness rate-limits in event time
         self.admission = admission if admission is not None \
-            else AdmissionController()
+            else AdmissionController(clock=clock)
         self.clock = clock
         self.services: Dict[str, Callable[[], Any]] = {}
         self.log: List[dict] = []

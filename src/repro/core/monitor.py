@@ -44,6 +44,7 @@ class Monitor:
         self._step_times: Dict[str, List[float]] = {}
         self._straggler_strikes: Dict[str, int] = {}
         self._pages: Dict[str, Tuple[int, int]] = {}   # dev -> (used, total)
+        self._scrub: Dict[str, Tuple[int, float]] = {}  # dev -> (pages, ms)
         # (t, arrivals, completions, active_devices) per fleet round, t on
         # the injected clock (event time under the event-driven loop)
         self._traffic: List[Tuple[float, int, int, int]] = []
@@ -208,8 +209,16 @@ class Monitor:
         and ``status()`` read it; clearing happens when an engine parks."""
         self._pages[device_id] = (int(used), int(total))
 
+    def record_scrub(self, device_id: str, pages: int, ms: float):
+        """Cumulative zero-on-free cost for one device's pool (pushed
+        alongside ``record_pages``): how many freed pages were scrubbed
+        and how many milliseconds the batched scrub dispatches cost. The
+        operator's view of what the isolation policy is buying/costing."""
+        self._scrub[device_id] = (int(pages), float(ms))
+
     def clear_pages(self, device_id: str):
         self._pages.pop(device_id, None)
+        self._scrub.pop(device_id, None)
 
     def page_occupancy(self) -> Dict[str, float]:
         return {dev: used / max(1, total)
@@ -224,6 +233,11 @@ class Monitor:
 
     # ---------------- status (gcs analogue) ----------------
     def status(self) -> dict:
+        """FULL fleet view — operator/fleet paths only. Gateway-facing
+        (tenant-callable) paths must use ``tenant_status``: this view
+        names every tenant's slices, page grants and occupancy, which is
+        exactly the cross-tenant observability the isolation threat model
+        forbids handing to a co-tenant."""
         return {
             "devices": {d.device_id: {
                 "state": d.state.value,
@@ -235,7 +249,26 @@ class Monitor:
             "pages": {dev: {"used": used, "total": total,
                             "occupancy": round(used / max(1, total), 4)}
                       for dev, (used, total) in self._pages.items()},
+            "scrub": {dev: {"pages": pages, "ms": round(ms, 3)}
+                      for dev, (pages, ms) in self._scrub.items()},
             "page_grants": self.db.page_grants(),
             "median_step_ms": self.median_step_ms(),
             "traffic": self.traffic_stats(),
         }
+
+    def tenant_status(self, tenant: str) -> dict:
+        """Tenant-scoped slice of ``status()``: ONLY what ``tenant`` owns
+        — its slices (state + page grant) and the state of the devices
+        hosting them. No co-tenant names, no shared-pool occupancy, no
+        fleet medians or traffic rates: each of those is a channel a
+        hostile tenant could poll to infer a co-resident's load."""
+        slices = {}
+        devices = {}
+        for d in self.db.devices.values():
+            own = {s.slice_id: {"state": s.state.value,
+                                "cache_pages": s.cache_pages}
+                   for s in d.slices.values() if s.owner == tenant}
+            if own:
+                slices.update(own)
+                devices[d.device_id] = {"state": d.state.value}
+        return {"tenant": tenant, "slices": slices, "devices": devices}

@@ -63,6 +63,13 @@ class BatchScheduler:
         self._seq = itertools.count()        # job ids
         self._hseq = itertools.count()       # FIFO tiebreak within priority
         self.history: List[dict] = []
+        # per-owner weighted fair share (deficit credit): owners with
+        # queued work accrue weight each pass and pay ``slots`` per start,
+        # so within a priority band a flood of one owner's jobs cannot
+        # starve a co-tenant — the same DRR policy the serving engine
+        # applies to decode slots, here over batch vSlice allocations
+        self._owner_weight: Dict[str, float] = {}
+        self._owner_credit: Dict[str, float] = {}
 
     # ---------------- submission ----------------
     def submit(self, owner: str, slots: int, service_model: str = "raas",
@@ -74,9 +81,41 @@ class BatchScheduler:
         heapq.heappush(self._heap, _QEntry(priority, next(self._hseq), job_id))
         return job
 
+    def set_owner_weight(self, owner: str,
+                         weight: Optional[float] = None) -> None:
+        """Fair-share weight for ``owner`` (None resets to 1.0)."""
+        if weight is None:
+            self._owner_weight.pop(owner, None)
+        else:
+            self._owner_weight[owner] = max(1e-3, float(weight))
+
     # ---------------- scheduling loop ----------------
+    def _fair_order(self, entries: List[_QEntry]) -> List[_QEntry]:
+        """Order queued entries by (priority, owner fair-share credit,
+        submission order). Owners with queued work accrue credit each
+        pass; a start debits ``slots``. With one owner — or balanced,
+        equally-weighted owners — this degenerates to plain
+        priority-FIFO, so fairness costs nothing until tenants actually
+        contend. Credit is pruned only when an owner has neither queued
+        nor running jobs (erasing debt mid-flight would reward a
+        one-job-at-a-time flood)."""
+        queued_owners = {self.jobs[e.job_id].owner for e in entries}
+        running_owners = {j.owner for j in self.jobs.values()
+                          if j.state == JobState.RUNNING}
+        for o in list(self._owner_credit):
+            if o not in queued_owners and o not in running_owners:
+                del self._owner_credit[o]
+        for o in sorted(queued_owners):
+            self._owner_credit[o] = self._owner_credit.get(o, 0.0) + \
+                self._owner_weight.get(o, 1.0)
+        return sorted(entries, key=lambda e: (
+            e.priority,
+            -self._owner_credit.get(self.jobs[e.job_id].owner, 0.0),
+            e.seq))
+
     def schedule_once(self) -> List[Job]:
-        """Admit as many queued jobs as capacity allows (priority order).
+        """Admit as many queued jobs as capacity allows (priority order,
+        owner-fair within a priority band — see ``_fair_order``).
         Returns the jobs started this pass.
 
         Backfill with aging: a job deferred by ``NoCapacityError`` normally
@@ -88,11 +127,15 @@ class BatchScheduler:
         """
         started: List[Job] = []
         deferred: List[_QEntry] = []
+        live: List[_QEntry] = []
         while self._heap:
             entry = heapq.heappop(self._heap)
+            if self.jobs[entry.job_id].state in (JobState.QUEUED,
+                                                 JobState.REQUEUED):
+                live.append(entry)
+        pending = self._fair_order(live)
+        for idx, entry in enumerate(pending):
             job = self.jobs[entry.job_id]
-            if job.state not in (JobState.QUEUED, JobState.REQUEUED):
-                continue
             try:
                 vs = self.db.allocate_slice(job.owner, job.slots,
                                             job.service_model)
@@ -104,6 +147,7 @@ class BatchScheduler:
                     self.history.append(
                         {"t": self.clock(), "kind": "holdback",
                          "job": job.job_id, "deferrals": job.deferrals})
+                    deferred.extend(pending[idx + 1:])
                     break
                 # keep draining the queue: a smaller job behind may still fit
                 continue
@@ -111,6 +155,8 @@ class BatchScheduler:
             job.state = JobState.RUNNING
             job.attempts += 1
             job.deferrals = 0
+            self._owner_credit[job.owner] = \
+                self._owner_credit.get(job.owner, 0.0) - job.slots
             self.db.set_slice_state(vs.slice_id, SliceState.RUNNING)
             self.history.append({"t": self.clock(), "kind": "start",
                                  "job": job.job_id, "slice": vs.slice_id})

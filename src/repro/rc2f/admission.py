@@ -14,6 +14,7 @@ Two layers:
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
 from typing import Callable, Dict, Optional
 
@@ -75,6 +76,13 @@ class ServiceQuota:
     # memory-fabric analogue of the slot quota (per-tenant accounting of
     # every shared resource, not just compute).
     max_cache_pages_per_tenant: int = 0
+    # Token-bucket rate limit on request submission (0 = unlimited).
+    # ``rate_limit_rps`` refills the bucket per clock second;
+    # ``rate_limit_burst`` caps it (0 derives max(1, rps)). Refusals shed
+    # a cancel/resubmit churn or request-flood attack at the cheapest
+    # possible point — before any prefill, page, or slot is touched.
+    rate_limit_rps: float = 0.0
+    rate_limit_burst: int = 0
 
 
 DEFAULT_QUOTAS: Dict[str, ServiceQuota] = {
@@ -95,6 +103,9 @@ class _TenantUsage:
     inflight: int = 0
     admitted: int = 0
     rejected: int = 0
+    rate_limited: int = 0
+    bucket: float = -1.0        # token-bucket level (-1: not yet filled)
+    refilled_at: float = 0.0
 
 
 class AdmissionController:
@@ -103,12 +114,19 @@ class AdmissionController:
 
     Raises ``AdmissionError`` when a tenant would exceed its ceiling; the
     caller (hypervisor / gateway) never allocates on a rejected request.
+
+    ``clock`` drives the rate-limit token buckets. The hypervisor passes
+    its own (fake, in tests and the soak harness) clock so refill is
+    deterministic event time, never wall time — the same discipline as
+    every other time source in the stack.
     """
 
-    def __init__(self, quotas: Optional[Dict[str, ServiceQuota]] = None):
+    def __init__(self, quotas: Optional[Dict[str, ServiceQuota]] = None,
+                 clock: Optional[Callable[[], float]] = None):
         self.quotas = dict(DEFAULT_QUOTAS)
         if quotas:
             self.quotas.update(quotas)
+        self.clock = clock if clock is not None else time.monotonic
         self._usage: Dict[tuple, _TenantUsage] = {}
 
     def quota_for(self, service_model: str) -> ServiceQuota:
@@ -138,10 +156,37 @@ class AdmissionController:
         u.slots = max(0, u.slots - slots)
 
     # ---------------- request admission ----------------
+    def _take_rate_token(self, tenant: str, service_model: str,
+                         q: ServiceQuota, u: _TenantUsage) -> None:
+        """Per-tenant token bucket: refill at ``rate_limit_rps`` per clock
+        second up to the burst cap, spend one token per submission.
+        Raises (and counts the refusal) when the bucket is dry — the
+        caller sheds the request before it costs anything downstream."""
+        if q.rate_limit_rps <= 0:
+            return
+        burst = float(q.rate_limit_burst) if q.rate_limit_burst > 0 \
+            else max(1.0, q.rate_limit_rps)
+        now = self.clock()
+        if u.bucket < 0:
+            u.bucket = burst               # a new tenant starts with a
+            u.refilled_at = now            # full burst allowance
+        else:
+            u.bucket = min(burst, u.bucket +
+                           max(0.0, now - u.refilled_at) * q.rate_limit_rps)
+            u.refilled_at = now
+        if u.bucket < 1.0:
+            u.rejected += 1
+            u.rate_limited += 1
+            raise AdmissionError(
+                f"tenant {tenant!r} rate-limited: {service_model} allows "
+                f"{q.rate_limit_rps} req/s (burst {burst:g})")
+        u.bucket -= 1.0
+
     def admit_request(self, tenant: str, service_model: str,
                       prompt_tokens: int, new_tokens: int):
         q = self.quota_for(service_model)
         u = self._u(tenant, service_model)
+        self._take_rate_token(tenant, service_model, q, u)
         if u.inflight >= q.max_inflight_requests:
             u.rejected += 1
             raise AdmissionError(
@@ -178,4 +223,5 @@ class AdmissionController:
         return {"slots": sum(u.slots for u in us),
                 "inflight": sum(u.inflight for u in us),
                 "admitted": sum(u.admitted for u in us),
-                "rejected": sum(u.rejected for u in us)}
+                "rejected": sum(u.rejected for u in us),
+                "rate_limited": sum(u.rate_limited for u in us)}

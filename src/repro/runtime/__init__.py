@@ -1,3 +1,6 @@
+from repro.runtime.adversary import (BEHAVIORS, CancelChurn, PageSquat,
+                                     PrefixProbe, PromptFlood,
+                                     ScenarioReport, run_scenario)
 from repro.runtime.events import Event, EventLoop, EventQueue
 from repro.runtime.faults import FakeClock, FaultEvent, FaultInjector
 from repro.runtime.fleet import GatewayFleet, JournalEntry

@@ -388,6 +388,7 @@ class GatewayFleet:
                                   bundle.example, static_desc=bundle.desc,
                                   geometry=bundle.geometry)
             engine.set_tenant_share(tenant, slots)
+            engine.set_tenant_weight(tenant, slots)
             if self.paged:
                 engine.set_tenant_pages(tenant, vs.cache_pages or None)
         except Exception:
@@ -408,6 +409,7 @@ class GatewayFleet:
             for r in engine.cancel_queued(tenant):
                 self._retire_entry(r.request_id)
             engine.set_tenant_share(tenant, None)
+            engine.set_tenant_weight(tenant, None)
             engine.set_tenant_pages(tenant, None)
         self._settle_outstanding(sess)
         self.hv.close_serving_session(sess.slice_id)
@@ -568,6 +570,8 @@ class GatewayFleet:
         if eng.paged:
             self.hv.monitor.record_pages(dev, eng.pool.used_pages,
                                          eng.pool.total_pages)
+            self.hv.monitor.record_scrub(dev, eng.pool.pages_scrubbed,
+                                         eng.scrub_ms)
         return n
 
     def finish_round(self) -> None:
@@ -680,6 +684,7 @@ class GatewayFleet:
             # source draining, and schedules the drain + adoption a few
             # ticks out (export-generation check / replay fallback there).
             target.set_tenant_share(sess.tenant, sess.slots)
+            target.set_tenant_weight(sess.tenant, sess.slots)
             if target.paged:
                 vs = self.hv.db.find_slice(new)
                 target.set_tenant_pages(sess.tenant, vs.cache_pages or None)
@@ -703,8 +708,10 @@ class GatewayFleet:
                         payloads[id(r)] = p
             moved = source.drain_tenant(sess.tenant)
             source.set_tenant_share(sess.tenant, None)
+            source.set_tenant_weight(sess.tenant, None)
             source.set_tenant_pages(sess.tenant, None)
         target.set_tenant_share(sess.tenant, sess.slots)
+        target.set_tenant_weight(sess.tenant, sess.slots)
         if target.paged:
             vs = self.hv.db.find_slice(new)
             target.set_tenant_pages(sess.tenant, vs.cache_pages or None)
@@ -830,6 +837,7 @@ class GatewayFleet:
                 program=self._bundle_for(vs.device_id).fingerprint
                 or self.program_fingerprint)
             target.set_tenant_share(tenant, vs.slots)
+            target.set_tenant_weight(tenant, vs.slots)
             if self.paged:
                 target.set_tenant_pages(tenant, vs.cache_pages or None)
             # journal replay in submission order (dict preserves it): the
@@ -1049,11 +1057,32 @@ class GatewayFleet:
 
     # ------------------------------------------------------------------
     def stats(self) -> dict:
+        """OPERATOR view: every session's counters and quota. Anything a
+        tenant can call must go through ``tenant_status`` instead."""
         return {t: {"slice": s.slice_id, "device": self._device_of.get(t),
                     "slots": s.slots, "submitted": s.submitted,
                     "served": s.served, "tokens_out": s.tokens_out,
                     "quota": self.hv.admission.usage(t)}
                 for t, s in self._sessions.items()}
+
+    def tenant_status(self, tenant: str) -> dict:
+        """Tenant-facing status: ONLY ``tenant``'s own session, quota and
+        page holdings, on whatever device currently hosts it. No
+        co-tenant names, pool occupancy, or fleet telemetry — the
+        cross-tenant observability ``stats()``/``fleet_stats()`` expose
+        is operator-only (see ARCHITECTURE.md, threat model)."""
+        out = dict(self.hv.monitor.tenant_status(tenant))
+        sess = self._sessions.get(tenant)
+        if sess is not None:
+            out["session"] = {"slice": sess.slice_id, "slots": sess.slots,
+                              "submitted": sess.submitted,
+                              "served": sess.served,
+                              "tokens_out": sess.tokens_out}
+            eng = self._engines.get(self._device_of.get(tenant))
+            if eng is not None and eng.paged:
+                out["pages_held"] = eng.pool.tenant_pages(tenant)
+        out["quota"] = self.hv.admission.usage(tenant)
+        return out
 
     def fleet_stats(self) -> dict:
         return {dev: {"active": sum(e.active_by_tenant().values()),

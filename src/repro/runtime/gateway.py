@@ -162,8 +162,11 @@ class ServingGateway:
             # swap — cache hit, microseconds; ALLOCATED -> CONFIGURED)
             self.hv.program_slice(vs.slice_id, self._decode_fn,
                                   self._example, static_desc=self._desc)
-            # slice-aware scheduling: a k-slot vSlice holds k engine slots
+            # slice-aware scheduling: a k-slot vSlice holds k engine slots,
+            # and its fair-share weight in the deficit round-robin is
+            # proportional to the compute share it paid for
             self.engine.set_tenant_share(tenant, slots)
+            self.engine.set_tenant_weight(tenant, slots)
             if self.paged:
                 # memory-aware scheduling: the engine's admission gate
                 # queues the tenant once it holds its vSlice page grant
@@ -187,6 +190,7 @@ class ServingGateway:
         for _ in range(max(0, sess.submitted - sess.served)):
             self.hv.admission.finish_request(tenant, sess.service_model)
         self.engine.set_tenant_share(tenant, None)
+        self.engine.set_tenant_weight(tenant, None)
         self.engine.set_tenant_pages(tenant, None)
         self.hv.close_serving_session(sess.slice_id)
 
@@ -242,6 +246,9 @@ class ServingGateway:
             self.hv.monitor.record_pages(self._device_key,
                                          self.engine.pool.used_pages,
                                          self.engine.pool.total_pages)
+            self.hv.monitor.record_scrub(self._device_key,
+                                         self.engine.pool.pages_scrubbed,
+                                         self.engine.scrub_ms)
         if self.migrate_every and self.engine.steps \
                 and self.engine.steps % self.migrate_every == 0:
             self.rebalance()
@@ -257,6 +264,9 @@ class ServingGateway:
             self.hv.monitor.record_pages(self._device_key,
                                          self.engine.pool.used_pages,
                                          self.engine.pool.total_pages)
+            self.hv.monitor.record_scrub(self._device_key,
+                                         self.engine.pool.pages_scrubbed,
+                                         self.engine.scrub_ms)
         if self.migrate_every and self.engine.steps \
                 and self.engine.steps % self.migrate_every == 0:
             self.rebalance()
@@ -306,11 +316,31 @@ class ServingGateway:
 
     # ------------------------------------------------------------------
     def stats(self) -> dict:
+        """OPERATOR view: every session's counters and quota. Anything a
+        tenant can call must go through ``tenant_status`` instead."""
         return {t: {"slice": s.slice_id, "slots": s.slots,
                     "submitted": s.submitted, "served": s.served,
                     "tokens_out": s.tokens_out,
                     "quota": self.hv.admission.usage(t)}
                 for t, s in self._sessions.items()}
+
+    def tenant_status(self, tenant: str) -> dict:
+        """Tenant-facing status: ONLY ``tenant``'s own session counters,
+        quota usage, page holdings and slices. Notably absent: co-tenant
+        names, shared-pool occupancy, fleet step medians — each is a
+        side channel a hostile tenant could poll to profile co-residents
+        (see ARCHITECTURE.md, tenant isolation & threat model)."""
+        out = dict(self.hv.monitor.tenant_status(tenant))
+        sess = self._sessions.get(tenant)
+        if sess is not None:
+            out["session"] = {"slice": sess.slice_id, "slots": sess.slots,
+                              "submitted": sess.submitted,
+                              "served": sess.served,
+                              "tokens_out": sess.tokens_out}
+        out["quota"] = self.hv.admission.usage(tenant)
+        if self.paged:
+            out["pages_held"] = self.engine.pool.tenant_pages(tenant)
+        return out
 
     def page_stats(self) -> dict:
         return self.engine.page_stats()

@@ -13,17 +13,29 @@ pos -1, so a gather through any block table never sees a valid-looking
 stale position.
 
 Prefix sharing is content-addressed and strictly intra-tenant: block j of
-a context is keyed by the hash chain over its token values (seeded with
-the tenant), so two concurrent requests of one tenant with a common
-prompt prefix share physical pages by refcount. A partially filled tail
-page is shared on an exact-content match and copy-on-written the moment a
-branch writes into it; registrations die with their pages (sharing is
-among temporally overlapping requests — there is no retained cache to
-evict).
+a context is keyed by a keyed-BLAKE2b hash chain over its token values,
+seeded with a per-tenant salt, so two concurrent requests of one tenant
+with a common prompt prefix share physical pages by refcount — while two
+*different* tenants' identical prompts produce unrelated keys (no
+cross-tenant hash-collision probe; Python's builtin ``hash`` is neither
+collision-resistant nor stable across processes). A partially filled
+tail page is shared on an exact-content match and copy-on-written the
+moment a branch writes into it; registrations die with their pages
+(sharing is among temporally overlapping requests — there is no retained
+cache to evict).
+
+Zero-on-free: with ``scrub_on_free`` (the default) every page whose
+refcount drops to zero is queued for a device-side scrub. The pool is
+host-only, so it never touches device memory itself — the engine drains
+``take_scrub()`` and runs one batched, jitted zeroing kernel before its
+next allocation point. ``_alloc_one`` refuses to hand out a page whose
+scrub is still pending: a missed flush fails loudly instead of leaking
+the previous tenant's KV values (or, worse, scrubbing the new tenant's).
 """
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from typing import Dict, Hashable, List, Optional, Tuple
 
 import numpy as np
@@ -61,7 +73,7 @@ class PagePoolManager:
     """Free list + block tables + refcounts + prefix cache for one engine."""
 
     def __init__(self, n_pages: int, page_size: int, n_slots: int,
-                 max_blocks: int):
+                 max_blocks: int, scrub_on_free: bool = True):
         if n_pages < 2:
             raise ValueError("pool needs >= 2 pages (page 0 is reserved)")
         self.n_pages = n_pages
@@ -80,6 +92,11 @@ class PagePoolManager:
         self._page_key: Dict[int, Hashable] = {}     # page -> its key
         self.prefix_hits = 0
         self.cow_copies = 0
+        # zero-on-free policy: freed pages queue here until the engine
+        # drains take_scrub() into one batched device-side zeroing
+        self.scrub_on_free = scrub_on_free
+        self._pending_scrub: List[int] = []
+        self.pages_scrubbed = 0
         # bumped on every block-table mutation: the engine keys its cached
         # device copy of the tables on this, so steady-state decode skips
         # the per-step host->device re-upload
@@ -118,6 +135,9 @@ class PagePoolManager:
         if not self._free:
             raise NoPagesError("page pool exhausted")
         pid = self._free.pop()
+        assert pid not in self._pending_scrub, \
+            f"page {pid} reallocated before its zero-on-free scrub was " \
+            f"flushed — the caller must drain take_scrub() before allocating"
         sanitizer.emit("page", (self._san, pid), "alloc")
         self._ref[pid] = 1
         self._owner[pid] = tenant
@@ -137,6 +157,8 @@ class PagePoolManager:
             if not self._tenant_pages[tenant]:
                 del self._tenant_pages[tenant]
             self._free.append(pid)
+            if self.scrub_on_free:
+                self._pending_scrub.append(pid)
 
     def _register(self, key: Hashable, pid: int):
         # first writer wins; identical content by construction
@@ -144,7 +166,40 @@ class PagePoolManager:
             self._prefix[key] = pid
             self._page_key[pid] = key
 
+    # ---------------- zero-on-free ----------------
+    @property
+    def scrub_pending(self) -> int:
+        return len(self._pending_scrub)
+
+    def take_scrub(self) -> List[int]:
+        """Drain the zero-on-free queue. The caller (the engine) owns the
+        actual device-side zeroing — it must scrub exactly these pages
+        before its next allocation, and every queued page is still on the
+        free list when this returns (``_alloc_one`` enforces it)."""
+        pids, self._pending_scrub = self._pending_scrub, []
+        for pid in pids:
+            sanitizer.emit("page", (self._san, pid), "scrub")
+        self.pages_scrubbed += len(pids)
+        return pids
+
     # ---------------- prefix matching ----------------
+    @staticmethod
+    def _chain_seed(tenant: str) -> int:
+        """Per-tenant salt for the content-hash chain: keyed BLAKE2b, so
+        identical prompts from different tenants map to unrelated key
+        chains and no tenant can probe another's cache by hash collision
+        (``hash()`` would be forgeable and PYTHONHASHSEED-unstable)."""
+        d = hashlib.blake2b(repr(tenant).encode("utf-8"),
+                            key=b"rc3e-kvpfx", digest_size=16).digest()
+        return int.from_bytes(d, "big")
+
+    @staticmethod
+    def _chain_step(h: int, toks) -> int:
+        data = h.to_bytes(16, "big") + b"".join(
+            int(t).to_bytes(8, "big", signed=True) for t in toks)
+        d = hashlib.blake2b(data, key=b"rc3e-kvpfx", digest_size=16).digest()
+        return int.from_bytes(d, "big")
+
     def _block_keys(self, tenant: str, toks) -> List[Hashable]:
         """Hash chain over full, content-complete blocks of a context.
         Block j is content-complete once prefill has written all of its
@@ -152,9 +207,9 @@ class PagePoolManager:
         written by the first decode step, not prefill)."""
         ps = self.page_size
         full = (len(toks) - 1) // ps
-        keys, h = [], hash(("kvpfx", tenant))
+        keys, h = [], self._chain_seed(tenant)
         for j in range(full):
-            h = hash((h,) + tuple(int(t) for t in toks[j * ps:(j + 1) * ps]))
+            h = self._chain_step(h, toks[j * ps:(j + 1) * ps])
             keys.append(h)
         return keys
 
@@ -167,7 +222,7 @@ class PagePoolManager:
         if (n - 1) % ps == 0:
             return None
         keys = self._block_keys(tenant, toks)
-        h = keys[-1] if keys else hash(("kvpfx", tenant))
+        h = keys[-1] if keys else self._chain_seed(tenant)
         return ("tail", h, tuple(int(t) for t in toks[full * ps:n - 1]))
 
     def _match(self, tenant: str, toks) -> Tuple[List[int], int]:
@@ -268,8 +323,12 @@ class PagePoolManager:
         (src, dst); the engine performs the actual device copy."""
         src = self._slot_pages[slot][block]
         dst = self._alloc_one(tenant)
-        sanitizer.emit("page", (self._san, src), "unshare")
-        self._ref[src] -= 1          # still > 0: another slot holds it
+        # route through _decref, never a bare ref decrement: if the other
+        # holder released between the is_shared check and here, src must
+        # take the full free path (prefix-key retirement, tenant
+        # accounting, scrub queue) — a bare decrement would strand a
+        # dangling _page_key entry on a free page
+        self._decref(src)
         self._slot_pages[slot][block] = dst
         self.block_tables[slot, block] = dst
         self.cow_copies += 1
@@ -307,7 +366,10 @@ class PagePoolManager:
           * per-tenant accounting sums exactly to the referenced pages;
           * block tables mirror the slot page lists (tail zeroed);
           * the prefix cache and its reverse map are a bijection onto
-            live pages.
+            live pages;
+          * no free page retains a dangling prefix key or owner entry;
+          * the zero-on-free queue is a duplicate-free subset of the
+            free list (a scrub can never hit a reallocated page).
 
         Raises AssertionError on the first violation.
         """
@@ -321,6 +383,16 @@ class PagePoolManager:
         for pid in self._free:
             assert self._ref[pid] == 0, f"free page {pid} has refcount " \
                 f"{self._ref[pid]}"
+            assert pid not in self._page_key, \
+                f"free page {pid} retains a dangling prefix key " \
+                f"{self._page_key[pid]!r}"
+            assert pid not in self._owner, \
+                f"free page {pid} retains an owner entry"
+        pending = set(self._pending_scrub)
+        assert len(pending) == len(self._pending_scrub), \
+            "page queued for scrub twice"
+        assert pending <= free_set, \
+            f"scrub queue holds non-free pages {sorted(pending - free_set)}"
         referenced = [p for p in range(1, self.n_pages) if self._ref[p] > 0]
         assert len(referenced) + len(self._free) == self.total_pages, \
             f"page conservation broken: {len(referenced)} referenced + " \
@@ -363,4 +435,7 @@ class PagePoolManager:
             "by_tenant": self.pages_by_tenant(),
             "prefix_hits": self.prefix_hits,
             "cow_copies": self.cow_copies,
+            "scrub_on_free": self.scrub_on_free,
+            "pages_scrubbed": self.pages_scrubbed,
+            "scrub_pending": self.scrub_pending,
         }

@@ -140,6 +140,25 @@ def _invalidate_pool_pages(pool, pages):
 
 
 @functools.partial(jax.jit, donate_argnums=(0,))
+def _scrub_pool_pages(pool, pages):
+    """Zero-on-free: restore ``pages`` to their init state across every
+    layer's pool — k/v content to 0, ``pos`` to -1, quantization scales to
+    1. ``_invalidate_pool_pages`` only resets pos, which hides stale K/V
+    from *attention* (masked) but not from ``export_request_pages``, whose
+    whole-page gather would hand a previous tenant's residual K/V values
+    to whoever receives the migration snapshot. One batched call per
+    engine flush, not one per page."""
+    def scrub(path, leaf):
+        key = getattr(path[-1], "key", None)
+        if key == "pos":
+            return leaf.at[:, pages].set(-1)
+        if key in ("k_scale", "v_scale"):
+            return leaf.at[:, pages].set(1)
+        return leaf.at[:, pages].set(0)
+    return jax.tree_util.tree_map_with_path(scrub, pool)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
 def _copy_page(pool, src, dst):
     """Copy-on-write detach: duplicate page ``src`` into ``dst`` across
     every layer's pool (leaves are (L, P, ps, ...); axis 1 is the page)."""
@@ -214,10 +233,13 @@ class BatchingEngine:
     share one decode program; prefill happens per-request into its slot.
 
     Requests are tenant-tagged: each tenant has its own FIFO queue, and
-    admission round-robins across tenants so one tenant's backlog cannot
-    starve the others. A tenant's *share* (max concurrent slots, set from
-    its vSlice size by the serving gateway) caps how many engine slots it
-    may occupy at once — slice-aware scheduling on a shared device.
+    admission runs weighted deficit round-robin across tenants (see
+    ``_pop_next_request``) so one tenant's backlog — even a deliberate
+    long-prompt flood — cannot starve the others or inflate their latency
+    past the fairness bound. A tenant's *share* (max concurrent slots, set
+    from its vSlice size by the serving gateway) caps how many engine
+    slots it may occupy at once — slice-aware scheduling on a shared
+    device.
 
     Two cache layouts:
 
@@ -244,7 +266,8 @@ class BatchingEngine:
                  prefill_mode: str = "batched",
                  id_counter: Optional[Iterator[int]] = None,
                  paged: bool = False, page_size: int = 16,
-                 cache_pages: Optional[int] = None):
+                 cache_pages: Optional[int] = None,
+                 scrub_on_free: bool = True):
         # Slot recycling relies on position-masked KV caches (stale entries
         # carry positions > current and are masked out). SSM state has no
         # such masking, so the engine serves attention-family models; SSM
@@ -265,7 +288,9 @@ class BatchingEngine:
         self._qlock = threading.Lock()
         self._tenant_share: Dict[str, int] = {}      # max concurrent slots
         self._tenant_pages: Dict[str, int] = {}      # max pool pages held
-        self._rr_offset = 0                          # round-robin cursor
+        self._tenant_weight: Dict[str, float] = {}   # fair-share weight
+        self._deficit: Dict[str, float] = {}         # DRR credit per tenant
+        self._rr_offset = 0                          # DRR tie-break cursor
         # request ids: a fleet passes one shared counter to every engine so
         # ids stay unique across devices (the hypervisor audit log and a
         # live hand-off both key on them)
@@ -278,6 +303,7 @@ class BatchingEngine:
         self._prefilling: Dict[int, _PendingPrefill] = {}
         self.steps = 0
         self.preemptions = 0
+        self.scrub_ms = 0.0        # cumulative zero-on-free dispatch cost
         self._scope = sanitizer.scope()      # slot-machine key namespace
         # device block-table cache, keyed on the pool's version counter:
         # steady-state decode steps reuse it instead of re-uploading the
@@ -297,7 +323,8 @@ class BatchingEngine:
                 cache_pages = default_pool_pages(n_slots, max_blocks)
             self.cache_pages = cache_pages
             self.pool = PagePoolManager(cache_pages, page_size, n_slots,
-                                        max_blocks)
+                                        max_blocks,
+                                        scrub_on_free=scrub_on_free)
             self.caches = model.make_paged_caches(cache_pages, page_size)
             self._pos = np.full((n_slots,), -1, np.int32)
             step = make_paged_serve_step(model)
@@ -340,6 +367,19 @@ class BatchingEngine:
             self._tenant_share.pop(tenant, None)
         else:
             self._tenant_share[tenant] = max(1, int(max_slots))
+
+    def set_tenant_weight(self, tenant: str,
+                          weight: Optional[float]) -> None:
+        """Fair-share weight for the deficit round-robin admission policy
+        (None resets to the default 1.0). A tenant accrues credit in
+        proportion to its weight and pays for every admission in
+        proportion to the context it prefills — so a hostile tenant
+        flooding long prompts buys *fewer* admissions per unit time, not
+        more, and a co-tenant's latency stays bounded."""
+        if weight is None:
+            self._tenant_weight.pop(tenant, None)
+        else:
+            self._tenant_weight[tenant] = max(1e-3, float(weight))
 
     def set_tenant_pages(self, tenant: str,
                          max_pages: Optional[int]) -> None:
@@ -532,6 +572,24 @@ class BatchingEngine:
             jnp.asarray(np.asarray(sorted(pages),    # rc3e: allow-host-sync
                                    np.int32)))
 
+    def _flush_scrub(self) -> int:
+        """Drain the pool's zero-on-free queue with ONE batched jitted
+        zeroing. Called at the top of every step and again immediately
+        before any page allocation (grow/COW/admit/import) — a freed page
+        must be scrubbed before it can be handed to the next tenant, and
+        ``PagePoolManager._alloc_one`` asserts we never miss a site.
+        No-op (one int compare) when nothing is pending."""
+        if not self.paged or not self.pool.scrub_pending:
+            return 0
+        pids = self.pool.take_scrub()
+        t0 = time.monotonic()
+        self.caches = _scrub_pool_pages(
+            self.caches,
+            jnp.asarray(np.asarray(sorted(pids),     # rc3e: allow-host-sync
+                                   np.int32)))
+        self.scrub_ms += (time.monotonic() - t0) * 1e3
+        return len(pids)
+
     def _page_budget_ok(self, tenant: str, extra: int) -> bool:
         budget = self._tenant_pages.get(tenant)
         return budget is None or \
@@ -549,31 +607,64 @@ class BatchingEngine:
         return needed <= self.pool.free_pages and \
             self._page_budget_ok(req.tenant, needed)
 
+    def _admit_cost(self, req: Request) -> float:
+        """What one admission debits from its tenant's fair-share credit:
+        one decode slot plus the prefill work, in page-sized chunks. A
+        4-page prompt costs ~5x a one-token resubmit, which is exactly the
+        asymmetry a prompt-flood attack exploits under plain round-robin
+        (every admission costs 1 there, regardless of prefill length)."""
+        unit = self.page_size if self.paged else 16
+        return 1.0 + (len(self._ctx_tokens(req)) - 1) / max(1, unit)
+
     def _pop_next_request(self) -> Optional[Request]:
-        """Round-robin over tenants: next queued request from a tenant with
-        spare share (and, in paged mode, an admissible head request),
-        starting after the last admitted tenant. Emptied queues are pruned
-        here so long-gone tenants don't linger in the rotation."""
+        """Weighted deficit round-robin over tenants (the per-tenant
+        fair-share policy): every *eligible* tenant — spare slot share
+        and, in paged mode, an admissible head request — accrues credit
+        proportional to its weight each time a slot is offered, the
+        highest-credit tenant is served, and the admission debits its
+        credit by ``_admit_cost`` (slot + prefill chunks). Ties break in
+        rotation order after the last served tenant, so equal-weight
+        tenants degenerate to the old round-robin. Blocked tenants accrue
+        nothing (a page-starved head must not bank unbounded priority),
+        and credit is pruned with the tenant's last queued request so
+        tenant churn cannot grow the map. Emptied queues are pruned here
+        so long-gone tenants don't linger in the rotation."""
         with self._qlock:
+            active = self.active_by_tenant()
+            # prune credit/debt only once a tenant is fully gone (no queue,
+            # no slots): clearing debt while it still holds slots would let
+            # a one-request-at-a-time flood dodge its admission debits
+            for t in list(self._deficit):
+                if t not in self._queues and not active.get(t):
+                    del self._deficit[t]
             tenants = [t for t, q in self._queues.items() if q]
             if not tenants:
                 return None
-            active = self.active_by_tenant()
             n = len(tenants)
-            for k in range(n):
-                t = tenants[(self._rr_offset + k) % n]
+            order = [tenants[(self._rr_offset + k) % n] for k in range(n)]
+            eligible = []
+            for t in order:
                 share = self._tenant_share.get(t, self.n_slots)
                 if active.get(t, 0) >= share:
                     continue
-                req = self._queues[t][0]
-                if not self._can_admit(req):
+                if not self._can_admit(self._queues[t][0]):
                     continue        # per-tenant FIFO: head blocks the rest
-                self._queues[t].popleft()
-                if not self._queues[t]:
-                    del self._queues[t]
-                self._rr_offset = (self._rr_offset + k + 1) % n
-                return req
-            return None
+                eligible.append(t)
+            if not eligible:
+                return None
+            best = None
+            for t in eligible:
+                self._deficit[t] = self._deficit.get(t, 0.0) + \
+                    self._tenant_weight.get(t, 1.0)
+                if best is None or self._deficit[t] > self._deficit[best]:
+                    best = t        # strict >: first-in-order wins ties
+            req = self._queues[best].popleft()
+            if not self._queues[best]:
+                del self._queues[best]
+            self._deficit[best] = self._deficit.get(best, 0.0) - \
+                self._admit_cost(req)
+            self._rr_offset = (tenants.index(best) + 1) % n
+            return req
 
     # ---------------- engine loop ----------------
     def _admit(self, async_chunk: Optional[int] = None):
@@ -622,6 +713,7 @@ class BatchingEngine:
         ctx = toks[:-1]
         plan = None
         if self.paged:
+            self._flush_scrub()
             plan = self.pool.admit(slot, req.tenant, toks,
                                    share=self.prefill_mode == "batched")
         buf = None
@@ -670,6 +762,7 @@ class BatchingEngine:
         refcount; only the unshared suffix blocks are prefilled + spliced.
         Legacy prefill steps every context token through the decode program
         (writes at every position), so it must not adopt shared pages."""
+        self._flush_scrub()
         plan = self.pool.admit(slot, req.tenant, toks,
                                share=self.prefill_mode == "batched")
         ctx = toks[:-1]
@@ -768,6 +861,10 @@ class BatchingEngine:
             if block >= len(self.pool.slot_blocks(i)):
                 if self.pool.free_pages >= 1 and \
                         self._page_budget_ok(req.tenant, 1):
+                    # an earlier slot in this same sweep may have been
+                    # preempted — its pages must be scrubbed before they
+                    # can be regrown here
+                    self._flush_scrub()
                     self._invalidate_pages([self.pool.grow(i, req.tenant)])
                 else:
                     self._preempt(i)
@@ -775,6 +872,7 @@ class BatchingEngine:
             if self.pool.is_shared(i, block):
                 if self.pool.free_pages >= 1 and \
                         self._page_budget_ok(req.tenant, 1):
+                    self._flush_scrub()
                     src, dst = self.pool.cow(i, block, req.tenant)
                     self.caches = _copy_page(self.caches, jnp.int32(src),
                                              jnp.int32(dst))
@@ -793,6 +891,7 @@ class BatchingEngine:
     def step(self) -> int:
         """One engine iteration: admit + one decode step for active slots.
         Returns number of active slots."""
+        self._flush_scrub()       # pages freed since the last step
         self._admit()
         return self._decode_once()
 
@@ -805,6 +904,7 @@ class BatchingEngine:
         ``step()`` cannot express. Token streams are bit-identical to the
         lockstep path: the same prefill result is spliced (just later) and
         greedy per-slot decoding is schedule-independent."""
+        self._flush_scrub()       # pages freed since the last event
         self._admit(async_chunk=prefill_chunk)
         for slot in sorted(self._prefilling):
             pending = self._prefilling[slot]
@@ -891,6 +991,7 @@ class BatchingEngine:
             return {}
         s = self.pool.stats()
         s["preemptions"] = self.preemptions
+        s["scrub_ms"] = round(self.scrub_ms, 3)
         return s
 
     def export_request_pages(self, req: Request):
@@ -940,6 +1041,7 @@ class BatchingEngine:
         if nb > self.pool.free_pages or \
                 not self._page_budget_ok(req.tenant, nb):
             return False
+        self._flush_scrub()
         pages = [self.pool.grow(slot, req.tenant) for _ in range(nb)]
         self.caches = _import_pages(
             self.caches, jax.tree.map(jnp.asarray, payload),
@@ -953,6 +1055,7 @@ class BatchingEngine:
             if pos // self.page_size >= len(self.pool.slot_blocks(slot)):
                 if self.pool.free_pages >= 1 and \
                         self._page_budget_ok(req.tenant, 1):
+                    self._flush_scrub()
                     self._invalidate_pages(
                         [self.pool.grow(slot, req.tenant)])
                 else:

@@ -95,6 +95,50 @@ def test_ownership_pass_exact_findings(tmp_path):
     }
 
 
+UNSCRUBBED_SRC = """
+    class Engine:
+        def _flush_scrub(self):
+            pass
+
+        def good_admit(self, slot, tenant, toks):
+            self._flush_scrub()
+            return self.pool.admit(slot, tenant, toks)
+
+        def good_drain(self, slot, tenant):
+            for pid in self.pool.take_scrub():
+                self.zero(pid)
+            return self.pool.grow(slot, tenant)
+
+        def bad_grow(self, slot, tenant):
+            return self.pool.grow(slot, tenant)  # recycled page, no scrub
+
+        def bad_cow(self, slot, b, tenant):
+            src, dst = self.pool.cow(slot, b, tenant)  # no scrub either
+            return dst
+
+        def waived(self, slot, tenant, toks):
+            return self.pool.admit(slot, tenant, toks)  # rc3e: allow-unscrubbed-free
+
+        def not_a_pool(self, slot, tenant, toks):
+            return self.queue.admit(slot, tenant, toks)
+    """
+
+
+def test_unscrubbed_free_exact_findings(tmp_path):
+    """Page-recycle sites (pool.admit/grow/cow) must sit behind a scrub
+    hook in the same function; receiver-matching keeps non-pool ``admit``
+    calls (e.g. the admission controller) out of scope."""
+    ws = _ws(tmp_path, {"runtime/engine.py": UNSCRUBBED_SRC})
+    found = {(f.rule, f.symbol, f.line) for f in ownership.run(ws)
+             if f.rule == "unscrubbed-free"}
+    assert found == {
+        ("unscrubbed-free", "Engine.bad_grow",
+         _line(UNSCRUBBED_SRC, "# recycled page, no scrub")),
+        ("unscrubbed-free", "Engine.bad_cow",
+         _line(UNSCRUBBED_SRC, "# no scrub either")),
+    }
+
+
 # ---------------------------------------------------------------------------
 # hostsync pass
 # ---------------------------------------------------------------------------

